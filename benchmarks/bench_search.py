@@ -1,0 +1,69 @@
+"""Search efficiency (paper Fig. 21): average distance computations,
+comparisons and wall time for 100 kNN queries at k in {5,10,15,20,50,100},
+per heuristic vs the BCCF baseline, plus recall@k vs exact brute force."""
+from __future__ import annotations
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import METHODS, emit, index_config, load_datasets
+from repro.core import build_baseline, build_index, knn_exact, knn_search_host
+
+K_VALUES = (5, 10, 15, 20, 50, 100)
+N_QUERIES = 100
+
+
+def _queries(x: np.ndarray, n: int, seed: int = 7) -> np.ndarray:
+    g = np.random.default_rng(seed)
+    idx = g.choice(len(x), n, replace=False)
+    return (x[idx] + 0.05 * x.std() * g.normal(size=(n, x.shape[1]))).astype(np.float32)
+
+
+def _run_one(forest, q, k, mode):
+    # warm compile
+    knn_search_host(forest, q[:2], k=k, mode=mode)
+    t0 = time.perf_counter()
+    d, ids, stats = knn_search_host(forest, q, k=k, mode=mode)
+    dt = time.perf_counter() - t0
+    return d, ids, stats, dt
+
+
+def run(full: bool = False, out: dict | None = None) -> None:
+    for ds in load_datasets(full):
+        q = _queries(ds.x, N_QUERIES)
+        de, ie = knn_exact(jnp.asarray(ds.x), jnp.asarray(q), k=max(K_VALUES))
+        ie = np.asarray(ie)
+        forests = {}
+        for method in METHODS:
+            forests[method], _ = build_index(ds.x, index_config(ds, method))
+        forests["bccf"], _ = build_baseline(ds.x, index_config(ds, "vbm"))
+        for method, forest in forests.items():
+            mode = "all" if method == "bccf" else "forest"
+            for k in K_VALUES:
+                d, ids, stats, dt = _run_one(forest, q, k, mode)
+                recall = float(np.mean([
+                    len(set(ids[i].tolist()) & set(ie[i, :k].tolist())) / k
+                    for i in range(len(q))
+                ]))
+                derived = (
+                    f"dataset={ds.name};method={method};k={k};"
+                    f"dist={stats['distances'].mean():.0f};"
+                    f"bound_dist={stats['bound_distances'].mean():.0f};"
+                    f"cmp={stats['comparisons'].mean():.0f};"
+                    f"buckets={stats['buckets_visited'].mean():.1f};"
+                    f"recall={recall:.3f};time_ms={dt*1e3/len(q):.3f}"
+                )
+                emit(f"search/{ds.name}/{method}/k{k}", dt * 1e6 / len(q), derived)
+                if out is not None:
+                    out[f"{ds.name}/{method}/k{k}"] = {
+                        "dist": float(stats["distances"].mean()),
+                        "cmp": float(stats["comparisons"].mean()),
+                        "recall": recall,
+                        "ms_per_query": dt * 1e3 / len(q),
+                    }
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,61 @@
+"""Roofline table generator: reads experiments/dryrun/*.json (written by
+launch/dryrun.py) and emits the per-(arch x shape x mesh) three-term
+roofline table for EXPERIMENTS.md §Roofline."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+DRYRUN_DIR = Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+
+
+def load_records(mesh: str = "single") -> list[dict]:
+    recs = []
+    for f in sorted(DRYRUN_DIR.glob(f"*_{mesh}.json")):
+        recs.append(json.loads(f.read_text()))
+    return recs
+
+
+def fmt_table(recs: list[dict]) -> str:
+    hdr = ("| arch | shape | compute (s) | memory (s) | collective (s) | "
+           "dominant | roofline frac | 6ND/HLO | status |")
+    sep = "|" + "---|" * 9
+    rows = [hdr, sep]
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"])):
+        if r["status"] != "ok":
+            rows.append(
+                f"| {r['arch']} | {r['shape']} | - | - | - | - | - | - | "
+                f"{r['status']}: {r.get('reason', r.get('error',''))[:40]} |")
+            continue
+        t = r["roofline"]
+        ratio = r.get("useful_compute_ratio")
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {t['compute_s']:.3e} | "
+            f"{t['memory_s']:.3e} | {t['collective_s']:.3e} | "
+            f"{t['dominant'].replace('_s','')} | {t['roofline_fraction']:.3f} | "
+            f"{ratio:.3f} | ok |" if ratio is not None else
+            f"| {r['arch']} | {r['shape']} | - | - | - | - | - | - | ok |")
+    return "\n".join(rows)
+
+
+def run(full: bool = False, out: dict | None = None) -> None:
+    for mesh in ("single", "multi"):
+        recs = load_records(mesh)
+        if not recs:
+            print(f"roofline/{mesh},0.00,no dry-run artifacts (run "
+                  f"python -m repro.launch.dryrun --all)")
+            continue
+        ok = [r for r in recs if r["status"] == "ok"]
+        skipped = [r for r in recs if r["status"] == "skipped"]
+        failed = [r for r in recs if r["status"] not in ("ok", "skipped")]
+        print(f"roofline/{mesh},0.00,cells={len(recs)};ok={len(ok)};"
+              f"skipped={len(skipped)};failed={len(failed)}")
+        if out is not None:
+            out[mesh] = {"table": fmt_table(recs), "n_ok": len(ok),
+                         "n_failed": len(failed)}
+
+
+if __name__ == "__main__":
+    run()
+    print()
+    print(fmt_table(load_records("single")))

@@ -1,0 +1,58 @@
+"""Serving example: batched requests against a small LM with kNN-LM
+retrieval from the paper's overlap-optimized datastore fused into every
+decode step (the paper's technique as a serving feature).
+
+    PYTHONPATH=src python examples/knn_serving.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.configs.base import RetrievalConfig
+from repro.data.synthetic import embedding_datastore
+from repro.models.model import Model
+from repro.serve.engine import Request, ServeEngine
+from repro.serve.retrieval import build_flat_datastore
+
+
+def main() -> None:
+    cfg = get_smoke_config("qwen2-0.5b").replace(
+        retrieval=RetrievalConfig(enabled=True, k=8, lam=0.3, datastore_size=4096))
+    model = Model(cfg)
+    params = model.init(jax.random.key(0))
+
+    # datastore keyed on hidden states (synthetic stand-in with token values)
+    keys, values = embedding_datastore(4096, cfg.d_model, seed=1)
+    values = values % cfg.vocab_size
+    ds = build_flat_datastore(keys, values)
+
+    engine = ServeEngine(model, params, num_slots=4, max_len=64, datastore=ds)
+    g = np.random.default_rng(0)
+    t0 = time.perf_counter()
+    for rid in range(10):
+        engine.submit(Request(
+            rid=rid,
+            prompt=g.integers(0, cfg.vocab_size, size=(8,)).astype(np.int32),
+            max_new_tokens=12,
+        ))
+    finished = engine.run()
+    dt = time.perf_counter() - t0
+    tokens = sum(len(r.out_tokens) for r in finished)
+    print(f"served {len(finished)} requests, {tokens} tokens, "
+          f"{engine.steps} batched decode steps, {dt:.1f}s wall "
+          f"({tokens/dt:.1f} tok/s incl. compile)")
+    for r in finished[:3]:
+        print(f"  req {r.rid}: prompt {r.prompt[:4].tolist()}... -> "
+              f"{r.out_tokens[:8]}... latency {r.latency_s:.2f}s")
+    assert all(len(r.out_tokens) >= r.max_new_tokens for r in finished)
+    print("retrieval-augmented serving OK")
+
+
+if __name__ == "__main__":
+    main()

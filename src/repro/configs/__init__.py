@@ -1,0 +1,55 @@
+"""Architecture registry: one module per assigned architecture.
+
+``get_config(arch_id)`` returns the full published configuration;
+``get_smoke_config(arch_id)`` returns a reduced same-family configuration
+for CPU smoke tests (small widths/layers/experts, identical code paths).
+"""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import (
+    SHAPES,
+    MLAConfig,
+    ModelConfig,
+    MoEConfig,
+    RetrievalConfig,
+    RWKVConfig,
+    ShapeConfig,
+    SSMConfig,
+    shape_applicable,
+)
+
+ARCH_IDS = [
+    "whisper-tiny",
+    "pixtral-12b",
+    "jamba-1.5-large-398b",
+    "smollm-135m",
+    "granite-20b",
+    "qwen2-0.5b",
+    "deepseek-67b",
+    "rwkv6-3b",
+    "deepseek-v2-236b",
+    "qwen3-moe-235b-a22b",
+]
+
+_MODULES = {a: "repro.configs." + a.replace("-", "_").replace(".", "_") for a in ARCH_IDS}
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in _MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {ARCH_IDS}")
+    return importlib.import_module(_MODULES[arch]).CONFIG
+
+
+def get_smoke_config(arch: str) -> ModelConfig:
+    if arch not in _MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {ARCH_IDS}")
+    return importlib.import_module(_MODULES[arch]).SMOKE_CONFIG
+
+
+__all__ = [
+    "ARCH_IDS", "get_config", "get_smoke_config", "SHAPES", "ShapeConfig",
+    "ModelConfig", "MoEConfig", "MLAConfig", "SSMConfig", "RWKVConfig",
+    "RetrievalConfig", "shape_applicable",
+]

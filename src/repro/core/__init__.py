@@ -1,0 +1,41 @@
+"""The paper's primary contribution: overlap-optimized metric-tree indexing
+(DBSCAN preprocessing -> VBM/DBM/OBM overlap estimation -> decision ->
+forest of BCCF trees) with a jittable, TPU-native kNN search."""
+from repro.core.dbscan import DBSCANResult, dbscan, partitions_from_labels
+from repro.core.decision import DecisionStats, Partition, decide
+from repro.core.forest import ForestArrays, build_forest
+from repro.core.knn import (
+    DeviceForest,
+    SearchStats,
+    device_forest,
+    knn_exact,
+    knn_search,
+    knn_search_host,
+)
+from repro.core.overlap import (
+    ball_log_volume,
+    cap_log_volume,
+    dbm_rate,
+    intersection_log_volume,
+    obm_rate,
+    overlap_matrix,
+    vbm_rate,
+)
+from repro.core.pipeline import (
+    BuildReport,
+    IndexConfig,
+    build_baseline,
+    build_index,
+    default_c_max,
+)
+
+__all__ = [
+    "DBSCANResult", "dbscan", "partitions_from_labels",
+    "DecisionStats", "Partition", "decide",
+    "ForestArrays", "build_forest",
+    "DeviceForest", "SearchStats", "device_forest",
+    "knn_exact", "knn_search", "knn_search_host",
+    "ball_log_volume", "cap_log_volume", "dbm_rate", "intersection_log_volume",
+    "obm_rate", "overlap_matrix", "vbm_rate",
+    "BuildReport", "IndexConfig", "build_baseline", "build_index", "default_c_max",
+]

@@ -1,0 +1,107 @@
+"""End-to-end index pipeline (paper §4): preprocessing -> overlap estimation
+-> decision-making -> forest construction.  Public entry points:
+
+  build_index(x, cfg)     — the paper's proposed method (VBM / DBM / OBM)
+  build_baseline(x, cfg)  — the BCCF-tree baseline (single k-means tree)
+"""
+from __future__ import annotations
+
+import math
+import time
+from dataclasses import dataclass, field
+from typing import Any
+
+import numpy as np
+
+from repro.core.dbscan import dbscan, partitions_from_labels
+from repro.core.decision import Partition, decide
+from repro.core.forest import ForestArrays, build_forest
+
+
+@dataclass(frozen=True)
+class IndexConfig:
+    method: str = "vbm"  # vbm | dbm | obm
+    xi_min: float = 0.4
+    xi_max: float = 0.8
+    eps: float = 1.0
+    min_pts: int = 8
+    c_max: int | None = None  # default sqrt(n)
+    pivot_method: str = "gh"  # proposed trees use GH partitioning (§4.3)
+    seed: int = 0
+    dbscan_block: int = 1024
+
+
+@dataclass
+class BuildReport:
+    config: IndexConfig
+    n_objects: int = 0
+    n_clusters: int = 0
+    n_indexes: int = 0
+    n_overlap_indexes: int = 0
+    dbscan_distances: int = 0
+    overlap_distances: int = 0
+    tree_distances: int = 0
+    tree_comparisons: int = 0
+    wall_time_s: float = 0.0
+    detail: dict[str, Any] = field(default_factory=dict)
+
+
+def default_c_max(n: int) -> int:
+    """Paper Def. 12: c_max = sqrt(n)."""
+    return max(4, int(math.sqrt(n)))
+
+
+def build_index(x, cfg: IndexConfig) -> tuple[ForestArrays, BuildReport]:
+    t0 = time.perf_counter()
+    x = np.asarray(x, np.float32)
+    n = len(x)
+    c_max = cfg.c_max or default_c_max(n)
+    report = BuildReport(config=cfg, n_objects=n)
+
+    # (i) preprocessing — DBSCAN (§4.1)
+    res = dbscan(x, cfg.eps, cfg.min_pts, block=cfg.dbscan_block)
+    report.dbscan_distances = res.distance_computations
+    report.n_clusters = res.n_clusters
+    pivots, radii, assign = partitions_from_labels(x, res.labels, res.n_clusters)
+
+    # (ii)+(iii) overlap estimation + decision (§4.2, §4.3)
+    groups, dstats = decide(
+        x, pivots, radii, assign,
+        method=cfg.method, xi_min=cfg.xi_min, xi_max=cfg.xi_max,
+    )
+    report.overlap_distances = dstats.distance_computations
+    report.n_overlap_indexes = dstats.n_overlap_indexes
+
+    # indexing — one BCCF tree per group, GH pivots (§4.3)
+    forest = build_forest(
+        x, groups, c_max=c_max, pivot_method=cfg.pivot_method, seed=cfg.seed
+    )
+    report.n_indexes = forest.n_indexes
+    report.tree_distances = forest.build_stats["tree_distances"]
+    report.tree_comparisons = forest.build_stats["tree_comparisons"]
+    report.wall_time_s = time.perf_counter() - t0
+    report.detail = dict(
+        decision=dstats.__dict__,
+        dbscan_iterations=res.n_iterations,
+        structure=forest.aggregate_structure(),
+    )
+    return forest, report
+
+
+def build_baseline(x, cfg: IndexConfig | None = None) -> tuple[ForestArrays, BuildReport]:
+    """BCCF-tree baseline [5]: one recursive 2-means tree over all data."""
+    t0 = time.perf_counter()
+    x = np.asarray(x, np.float32)
+    n = len(x)
+    cfg = cfg or IndexConfig()
+    c_max = cfg.c_max or default_c_max(n)
+    pivot = x.mean(axis=0).astype(np.float32)
+    radius = float(np.sqrt(((x - pivot) ** 2).sum(-1)).max())
+    groups = [Partition(members=np.arange(n), pivot=pivot, radius=radius)]
+    forest = build_forest(x, groups, c_max=c_max, pivot_method="kmeans", seed=cfg.seed)
+    report = BuildReport(config=cfg, n_objects=n, n_clusters=1, n_indexes=1)
+    report.tree_distances = forest.build_stats["tree_distances"]
+    report.tree_comparisons = forest.build_stats["tree_comparisons"]
+    report.wall_time_s = time.perf_counter() - t0
+    report.detail = dict(structure=forest.aggregate_structure())
+    return forest, report

@@ -1,0 +1,4 @@
+from repro.data.pipeline import DataConfig, TokenPipeline, make_batch_specs
+from repro.data.synthetic import tracking_like, ward_like
+
+__all__ = ["DataConfig", "TokenPipeline", "make_batch_specs", "tracking_like", "ward_like"]

@@ -1,0 +1,15 @@
+"""Distribution substrate: ambient mesh context, logical-axis sharding
+rules, collective helpers, HLO analysis, elasticity."""
+from repro.distributed import context
+from repro.distributed.sharding import (
+    batch_spec,
+    logical_constraint,
+    param_shardings,
+    set_rule,
+    spec_for_param,
+)
+
+__all__ = [
+    "context", "batch_spec", "logical_constraint", "param_shardings",
+    "set_rule", "spec_for_param",
+]

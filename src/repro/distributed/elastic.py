@@ -1,0 +1,45 @@
+"""Elastic scaling: re-mesh on changed device count.
+
+Checkpoints store logical (unsharded) arrays (checkpoint/), so scaling is:
+pick the best mesh for the surviving device count, recompute shardings from
+the same logical rules, reload.  ``plan_mesh`` chooses the (data, model)
+factorization: model parallelism keeps its degree as long as the device
+count allows (TP degree is dictated by model size, not fleet size); data
+parallelism absorbs the change.  Used by launch/train.py on restart.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+
+
+@dataclass(frozen=True)
+class MeshPlan:
+    shape: tuple[int, ...]
+    axes: tuple[str, ...]
+
+    def build(self):
+        return jax.make_mesh(self.shape, self.axes)
+
+
+def plan_mesh(n_devices: int, *, preferred_model: int = 16) -> MeshPlan:
+    """Largest power-of-two model axis <= preferred that divides n_devices."""
+    model = 1
+    m = preferred_model
+    while m > 1:
+        if n_devices % m == 0:
+            model = m
+            break
+        m //= 2
+    data = n_devices // model
+    if model == 1:
+        return MeshPlan((data,), ("data",))
+    return MeshPlan((data, model), ("data", "model"))
+
+
+def rescale_batch(global_batch: int, old_devices: int, new_devices: int) -> int:
+    """Keep per-device batch constant under rescale (linear-scaling rule);
+    round to keep divisibility."""
+    per_dev = max(global_batch // old_devices, 1)
+    return per_dev * new_devices

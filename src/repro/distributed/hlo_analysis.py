@@ -1,0 +1,101 @@
+"""Post-compile HLO analysis: collective-traffic accounting + roofline terms.
+
+``cost_analysis`` gives per-device FLOPs and bytes but NOT collective
+traffic; we parse the partitioned HLO text and sum operand bytes of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute.
+Hardware model: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # bytes/s / chip
+ICI_BW = 50e9  # bytes/s/link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "token": 0, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+COLLECTIVE_OPS = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"\b([a-z][a-z0-9]*)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    b = _DTYPE_BYTES.get(dtype)
+    if b is None:
+        return 0
+    n = 1
+    if dims.strip():
+        for d in dims.split(","):
+            n *= int(d)
+    return n * b
+
+
+@dataclass
+class CollectiveStats:
+    bytes_by_op: dict[str, int] = field(default_factory=dict)
+    count_by_op: dict[str, int] = field(default_factory=dict)
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_op.values())
+
+    def summary(self) -> dict:
+        return {
+            "total_bytes": self.total_bytes,
+            "bytes_by_op": dict(self.bytes_by_op),
+            "count_by_op": dict(self.count_by_op),
+        }
+
+
+def collective_bytes(hlo_text: str) -> CollectiveStats:
+    """Sum operand sizes of every collective instruction (per-device view).
+
+    Matches both sync ops and -start/-done async pairs (counted once at
+    -start / plain form).
+    """
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        m = re.search(
+            r"=\s*(?:\([^=]*\)|\S+)\s+(" + "|".join(COLLECTIVE_OPS) + r")(-start)?\(",
+            line,
+        )
+        if not m:
+            continue
+        op = m.group(1)
+        # operand shapes: shape literals appearing after the op-name '('
+        tail = line[m.end():]
+        nbytes = sum(_shape_bytes(d, dims) for d, dims in _SHAPE_RE.findall(tail))
+        stats.bytes_by_op[op] = stats.bytes_by_op.get(op, 0) + nbytes
+        stats.count_by_op[op] = stats.count_by_op.get(op, 0) + 1
+    return stats
+
+
+def roofline_terms(
+    flops_per_device: float,
+    hbm_bytes_per_device: float,
+    collective_bytes_per_device: float,
+) -> dict:
+    """The three per-step roofline terms, in seconds (per-device program)."""
+    t_compute = flops_per_device / PEAK_FLOPS
+    t_memory = hbm_bytes_per_device / HBM_BW
+    t_collective = collective_bytes_per_device / ICI_BW
+    terms = {"compute_s": t_compute, "memory_s": t_memory, "collective_s": t_collective}
+    dom = max(terms, key=terms.get)
+    bound = max(terms.values())
+    terms["dominant"] = dom
+    terms["roofline_fraction"] = (t_compute / bound) if bound > 0 else 0.0
+    return terms
+
+
+def model_flops_per_token(n_params_active: int) -> float:
+    """6 N D rule: returns 6 * N (multiply by tokens for the step total)."""
+    return 6.0 * n_params_active

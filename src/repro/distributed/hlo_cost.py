@@ -1,0 +1,259 @@
+"""Trip-count-aware cost extraction from compiled HLO text.
+
+XLA's ``compiled.cost_analysis()`` (CPU backend) counts while-loop bodies
+ONCE — useless for scan-over-layers programs where >95% of work lives in
+loop bodies.  This module re-derives whole-program costs from the
+post-optimization HLO text itself:
+
+1. parse the module into computations; per computation build an SSA
+   name -> shape table (every instruction line defines ``%name = shape op``);
+2. per computation, accumulate
+     * dot/convolution FLOPs (2 * prod(result dims) * prod(contracting dims),
+       contracting sizes resolved through the SSA table),
+     * bytes accessed (operands + result of every instruction — an upper-ish
+       proxy for HBM traffic consistent with XLA's own definition),
+     * collective bytes (result-shape based, comm-factor per op kind);
+3. build the call graph (while body/condition, fusion calls, conditionals),
+   extract static trip counts from loop-condition constants, and fold costs
+   bottom-up:  total(entry) = own + sum(child_total * trips).
+
+All quantities are for the PER-DEVICE SPMD program (the mesh-partitioned
+module), which is exactly what the per-chip roofline terms need.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "token": 0, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "f8e4m3": 1, "f8e5m2fnuz": 1, "f8e4m3fnuz": 1,
+}
+
+COLLECTIVE_FACTORS = {
+    # traffic per device ~ factor * result_bytes (ring algorithms, large N)
+    "all-reduce": 2.0,
+    "all-gather": 1.0,
+    "reduce-scatter": 1.0,   # input-side traffic ~ result * (N-1); we use
+                             # result bytes * N from the operand instead (below)
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+# computation headers sit at column 0: "%name (args...) -> result {"
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*->.*{\s*$")
+_INSTR = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*((?:\([^=]*?\))|(?:[a-z][a-z0-9]*\[[0-9,]*\](?:{[^}]*})?))\s*([\w\-]+)\((.*)$"
+)
+
+
+def _parse_shapes(text: str) -> list[tuple[str, tuple[int, ...]]]:
+    out = []
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt in _DTYPE_BYTES:
+            shape = tuple(int(d) for d in dims.split(",")) if dims.strip() else ()
+            out.append((dt, shape))
+    return out
+
+
+def _bytes_of(shapes: list[tuple[str, tuple[int, ...]]]) -> int:
+    total = 0
+    for dt, shape in shapes:
+        n = 1
+        for d in shape:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class CompCost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_bytes: float = 0.0
+    coll_by_op: dict[str, float] = field(default_factory=dict)
+    children: list[tuple[str, str]] = field(default_factory=list)  # (comp, kind)
+    trip_hint: float = 1.0  # for while bodies, set on the WHILE edge instead
+
+# ops whose operand/result bytes are NOT HBM traffic at this level: control
+# flow passes tuples through; fusion internals stay in registers/VMEM (the
+# fusion INSTRUCTION's operands+result are the materialization boundary).
+_NO_BYTES_OPS = (
+    "tuple", "get-tuple-element", "parameter", "constant", "bitcast",
+    "while", "conditional", "call",
+)
+
+
+@dataclass
+class ModuleCost:
+    flops: float
+    bytes: float
+    coll_bytes: float
+    coll_by_op: dict[str, float]
+    n_while: int
+    trip_counts: dict[str, float]
+
+
+def _split_computations(hlo: str) -> dict[str, list[str]]:
+    hlo = re.sub(r"/\*.*?\*/", "", hlo)  # strip /*index=N*/ tuple comments
+    comps: dict[str, list[str]] = {}
+    cur: str | None = None
+    for line in hlo.splitlines():
+        if cur is None:
+            if line[:1].isspace():
+                continue
+            m = _COMP_HDR.match(line.rstrip())
+            if m:
+                cur = m.group(1)
+                comps[cur] = []
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        comps[cur].append(line)
+    return comps
+
+
+_CALL_REFS = re.compile(
+    r"(?:calls=|body=|condition=|to_apply=|branch_computations={)%?([\w\.\-]+(?:,\s*%?[\w\.\-]+)*)"
+)
+
+
+def analyze_module(hlo: str, *, default_trips: float = 1.0) -> ModuleCost:
+    comps = _split_computations(hlo)
+    # SSA shape tables + constants per computation
+    shapes: dict[str, dict[str, list[tuple[str, tuple[int, ...]]]]] = {}
+    consts: dict[str, dict[str, float]] = {}
+    for cname, lines in comps.items():
+        tab: dict[str, list[tuple[str, tuple[int, ...]]]] = {}
+        ctab: dict[str, float] = {}
+        for line in lines:
+            m = _INSTR.match(line)
+            if not m:
+                # parameter lines: "%p = f32[..]{..} parameter(0)"
+                continue
+            name, shape_txt, op, _rest = m.groups()
+            tab[name] = _parse_shapes(shape_txt)
+            if op == "constant":
+                mm = re.search(r"constant\((-?[\d\.]+)\)", line)
+                if mm:
+                    try:
+                        ctab[name] = float(mm.group(1))
+                    except ValueError:
+                        pass
+        shapes[cname] = tab
+        consts[cname] = ctab
+
+    costs: dict[str, CompCost] = {}
+    while_edges: dict[str, list[tuple[str, str]]] = {}  # comp -> [(body, cond)]
+    for cname, lines in comps.items():
+        cc = CompCost()
+        tab = shapes[cname]
+        for line in lines:
+            m = _INSTR.match(line)
+            if not m:
+                continue
+            name, shape_txt, op, rest = m.groups()
+            result_shapes = tab.get(name, [])
+            result_bytes = _bytes_of(result_shapes)
+            # operand shapes via SSA refs
+            opnd_names = re.findall(r"%([\w\.\-]+)", rest.split(")")[0])
+            opnd_bytes = sum(_bytes_of(tab.get(o, [])) for o in opnd_names)
+            if op not in _NO_BYTES_OPS:
+                cc.bytes += result_bytes + opnd_bytes
+            if op in ("dot", "convolution"):
+                cdims = re.search(r"lhs_contracting_dims={([0-9,]*)}", rest)
+                lhs = tab.get(opnd_names[0], []) if opnd_names else []
+                k = 1
+                if cdims and lhs:
+                    dims = lhs[0][1]
+                    for ci in cdims.group(1).split(","):
+                        if ci.strip() and int(ci) < len(dims):
+                            k *= dims[int(ci)]
+                elif lhs and lhs[0][1]:
+                    k = lhs[0][1][-1]
+                n_out = 1
+                for _, sh in result_shapes:
+                    for d in sh:
+                        n_out *= d
+                cc.flops += 2.0 * n_out * max(k, 1)
+            base_op = op[:-6] if op.endswith("-start") else op
+            if base_op in COLLECTIVE_FACTORS and not op.endswith("-done"):
+                f = COLLECTIVE_FACTORS[base_op]
+                vol = result_bytes * f
+                if base_op == "reduce-scatter":
+                    vol = opnd_bytes  # ~ input bytes
+                cc.coll_bytes += vol
+                cc.coll_by_op[base_op] = cc.coll_by_op.get(base_op, 0.0) + vol
+            if op == "while":
+                mb = re.search(r"body=%?([\w\.\-]+)", rest)
+                mc = re.search(r"condition=%?([\w\.\-]+)", rest)
+                if mb:
+                    while_edges.setdefault(cname, []).append(
+                        (mb.group(1), mc.group(1) if mc else ""))
+            else:
+                kind = "fusion" if op == "fusion" else "call"
+                for mref in _CALL_REFS.finditer(rest):
+                    for ref in re.split(r",\s*%?", mref.group(1)):
+                        cc.children.append((ref.strip().lstrip("%"), kind))
+        costs[cname] = cc
+
+    def trip_count(cond: str) -> float:
+        """Largest constant in the loop condition — the scan bound."""
+        vals = [v for v in consts.get(cond, {}).values() if 1 <= v <= 1e7]
+        return max(vals) if vals else default_trips
+
+    trips_used: dict[str, float] = {}
+
+    memo: dict[str, tuple[float, float, float, dict]] = {}
+
+    def fold(cname: str, depth: int = 0) -> tuple[float, float, float, dict]:
+        if cname in memo:
+            return memo[cname]
+        if cname not in costs or depth > 64:
+            return (0.0, 0.0, 0.0, {})
+        cc = costs[cname]
+        fl, by, co = cc.flops, cc.bytes, cc.coll_bytes
+        cop = dict(cc.coll_by_op)
+        for child, kind in cc.children:
+            cfl, cby, cco, ccop = fold(child, depth + 1)
+            fl += cfl
+            # fusion internals live in registers/VMEM: their bytes are not
+            # HBM traffic (the fusion op's own operands/result were counted)
+            if kind != "fusion":
+                by += cby
+            co += cco
+            for k, v in ccop.items():
+                cop[k] = cop.get(k, 0.0) + v
+        for body, cond in while_edges.get(cname, []):
+            t = trip_count(cond)
+            trips_used[body] = t
+            bfl, bby, bco, bcop = fold(body, depth + 1)
+            fl += bfl * t
+            by += bby * t
+            co += bco * t
+            for k, v in bcop.items():
+                cop[k] = cop.get(k, 0.0) + v * t
+        memo[cname] = (fl, by, co, cop)
+        return memo[cname]
+
+    # entry = the computation not referenced by anyone (or named 'main')
+    referenced = set()
+    for cc in costs.values():
+        referenced.update(c for c, _ in cc.children)
+    for edges in while_edges.values():
+        for b, c in edges:
+            referenced.update((b, c))
+    entries = [c for c in costs if c not in referenced]
+    entry = next((c for c in entries if "main" in c), entries[0] if entries else None)
+    if entry is None:
+        return ModuleCost(0, 0, 0, {}, 0, {})
+    fl, by, co, cop = fold(entry)
+    return ModuleCost(
+        flops=fl, bytes=by, coll_bytes=co, coll_by_op=cop,
+        n_while=sum(len(v) for v in while_edges.values()),
+        trip_counts=trips_used,
+    )

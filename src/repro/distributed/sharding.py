@@ -1,0 +1,232 @@
+"""Logical-axis sharding rules (MaxText-style) for params and activations.
+
+A single rule table maps *logical* axis names onto mesh axes; every rule is
+guarded by a divisibility check so small architectures (9 heads, 14 heads,
+kv=1, ...) degrade gracefully to replication on that dimension instead of
+failing to lower.  Parameter specs are resolved from the parameter tree by
+path-pattern matching and left-padded with None for scan-stacked leading
+axes, so the same table serves all ten architectures.
+
+Physical axes:
+  'pod'   — inter-pod data parallelism (multi-pod mesh only)
+  'data'  — intra-pod data parallel / FSDP
+  'model' — tensor / expert / vocab parallelism
+"""
+from __future__ import annotations
+
+import math
+import re
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed import context as dctx
+
+Array = jax.Array
+
+# logical axis -> tuple of physical mesh axes
+LOGICAL_AXES: dict[str, tuple[str, ...]] = {
+    "batch": ("pod", "data"),
+    "fsdp": ("pod", "data"),
+    "seq": (),           # optionally ('model',) via seq_shard_activations
+    "seq_kv": ("model",),  # decode KV caches: shard context length
+    "embed": (),
+    "vocab": ("model",),
+    "heads": ("model",),
+    "mlp": ("model",),
+    "expert": ("model",),
+    "tensor": ("model",),
+    "none": (),
+}
+
+# parameter path pattern -> logical spec (rightmost dims; left-padded w/ None)
+_PARAM_RULES: list[tuple[str, tuple[str, ...]]] = [
+    (r"embed$", ("vocab", "fsdp")),
+    (r"pos_embed$", ("none", "fsdp")),
+    (r"lm_head$", ("fsdp", "vocab")),
+    (r"patch_proj$", ("none", "fsdp")),
+    (r"frame_proj$", ("none", "fsdp")),
+    # attention (gqa + whisper)
+    (r"(attn|cross)/wq$", ("fsdp", "heads", "none")),
+    (r"(attn|cross)/w[kv]$", ("fsdp", "none", "none")),
+    (r"(attn|cross)/wo$", ("heads", "none", "fsdp")),
+    (r"(attn|cross)/b[qkv]$", ("none", "none")),
+    # MLA
+    (r"attn/wdq$", ("fsdp", "none")),
+    (r"attn/wuq$", ("none", "heads", "none")),
+    (r"attn/wdkv$", ("fsdp", "none")),
+    (r"attn/wk_rope$", ("fsdp", "none")),
+    (r"attn/wu[kv]$", ("none", "heads", "none")),
+    # dense MLPs (swiglu + gelu)
+    (r"mlp/w_(in|gate)$", ("fsdp", "mlp")),
+    (r"mlp/w_out$", ("mlp", "fsdp")),
+    (r"mlp/b_in$", ("mlp",)),
+    (r"mlp/b_out$", ("none",)),
+    # MoE
+    (r"moe/router$", ("fsdp", "none")),
+    (r"moe/w_(in|gate)$", ("expert", "fsdp", "none")),
+    (r"moe/w_out$", ("expert", "none", "fsdp")),
+    (r"moe/shared/w_(in|gate)$", ("fsdp", "mlp")),
+    (r"moe/shared/w_out$", ("mlp", "fsdp")),
+    # Mamba
+    (r"mamba/in_proj$", ("fsdp", "mlp")),
+    (r"mamba/conv_w$", ("none", "mlp")),
+    (r"mamba/conv_b$", ("mlp",)),
+    (r"mamba/x_proj$", ("mlp", "none")),
+    (r"mamba/dt_proj$", ("none", "mlp")),
+    (r"mamba/dt_bias$", ("mlp",)),
+    (r"mamba/a_log$", ("mlp", "none")),
+    (r"mamba/d_skip$", ("mlp",)),
+    (r"mamba/out_proj$", ("mlp", "fsdp")),
+    # RWKV time-mix: per-head state ops -> no TP on the head structure
+    (r"tm/w[rkvgo]$", ("fsdp", "none")),
+    (r"tm/lora_a$", ("fsdp", "none")),
+    (r"tm/wd_a$", ("fsdp", "none")),
+    # RWKV channel-mix: plain MLP -> TP fine
+    (r"cm/wk$", ("fsdp", "mlp")),
+    (r"cm/wv$", ("mlp", "fsdp")),
+    (r"cm/wr$", ("fsdp", "none")),
+]
+
+
+def _axes_for(logical: str, mesh) -> tuple[str, ...]:
+    return tuple(a for a in LOGICAL_AXES[logical] if a in mesh.axis_names)
+
+
+def _fit(axes: tuple[str, ...], dim: int, mesh) -> tuple[str, ...] | None:
+    """Divisibility guard: only shard if the dim divides evenly."""
+    if not axes:
+        return None
+    total = math.prod(mesh.shape[a] for a in axes)
+    if total <= 1 or dim % total != 0:
+        return None
+    return axes if len(axes) > 1 else axes
+
+
+def _raw_spec(path: str, ndim: int) -> list[str]:
+    """Logical names per dim (left-padded for scan-stacked leading axes)."""
+    # adafactor factored stats: inherit the parent rule minus the reduced dim
+    if path.endswith("/vr"):
+        return _raw_spec(path[:-3], ndim + 1)[:-1]
+    if path.endswith("/vc"):
+        parent = _raw_spec(path[:-3], ndim + 1)
+        return parent[:-2] + parent[-1:]
+    for pat, logical in _PARAM_RULES:
+        if re.search(pat, path):
+            spec = list(logical)
+            break
+    else:
+        spec = []
+    spec = spec[-ndim:] if len(spec) > ndim else spec
+    return ["none"] * (ndim - len(spec)) + spec
+
+
+def spec_for_param(path: str, shape: tuple[int, ...], mesh) -> P:
+    out = []
+    used: set[str] = set()
+    for dim, name in zip(shape, _raw_spec(path, len(shape))):
+        # a mesh axis may shard at most one dim; later dims drop the
+        # already-used axes (rule overlays like zero3+vocab need this)
+        cand = tuple(a for a in _axes_for(name, mesh) if a not in used)
+        axes = _fit(cand, dim, mesh)
+        if axes is None:
+            out.append(None)
+        else:
+            used.update(axes)
+            out.append(axes if len(axes) > 1 else axes[0])
+    return P(*out)
+
+
+# decode-cache path pattern -> logical spec (rightmost dims)
+_CACHE_RULES: list[tuple[str, tuple[str, ...]]] = [
+    (r"/(k|v)$", ("batch", "seq_kv", "none", "none")),
+    (r"/(ck|cv)$", ("batch", "none", "none", "none")),  # whisper cross (S=1500)
+    (r"/c_kv$", ("batch", "seq_kv", "none")),
+    (r"/k_rope$", ("batch", "seq_kv", "none")),
+    (r"/conv$", ("batch", "none", "mlp")),
+    (r"/ssm$", ("batch", "mlp", "none")),
+    (r"/wkv$", ("batch", "none", "none", "none")),
+    (r"/shift$", ("batch", "none", "none")),
+]
+
+
+def spec_for_cache(path: str, shape: tuple[int, ...], mesh) -> P:
+    for pat, logical in _CACHE_RULES:
+        if re.search(pat, path):
+            spec = list(logical)
+            break
+    else:
+        spec = []
+    spec = spec[-len(shape):] if len(spec) > len(shape) else spec
+    spec = ["none"] * (len(shape) - len(spec)) + spec
+    out = []
+    for dim, name in zip(shape, spec):
+        axes = _fit(_axes_for(name, mesh), dim, mesh)
+        out.append(axes if axes is None else (axes if len(axes) > 1 else axes[0]))
+    return P(*out)
+
+
+def cache_shardings(cache_shape: Any, mesh) -> Any:
+    def leaf(path, x):
+        return NamedSharding(mesh, spec_for_cache(_path_str(path), x.shape, mesh))
+
+    return jax.tree_util.tree_map_with_path(leaf, cache_shape)
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p_ in path:
+        if hasattr(p_, "key"):
+            parts.append(str(p_.key))
+        elif hasattr(p_, "idx"):
+            parts.append(str(p_.idx))
+        else:
+            parts.append(str(p_))
+    return "/".join(parts)
+
+
+def param_shardings(params_shape: Any, mesh) -> Any:
+    """NamedSharding tree for an eval_shape'd parameter tree."""
+    def leaf(path, x):
+        return NamedSharding(mesh, spec_for_param(_path_str(path), x.shape, mesh))
+
+    return jax.tree_util.tree_map_with_path(leaf, params_shape)
+
+
+def logical_constraint(x: Array, logical: tuple[str | None, ...]) -> Array:
+    """with_sharding_constraint via logical names; no-op without a mesh."""
+    mesh = dctx.current_mesh()
+    if mesh is None:
+        return x
+    out = []
+    used: set[str] = set()
+    for dim, name in zip(x.shape, logical):
+        if name is None:
+            out.append(None)
+            continue
+        axes = _fit(_axes_for(name, mesh), dim, mesh)
+        # a mesh axis may shard at most one dim (first-come-first-served)
+        if axes is not None and any(a in used for a in axes):
+            axes = None
+        if axes is None:
+            out.append(None)
+        else:
+            used.update(axes)
+            out.append(axes if len(axes) > 1 else axes[0])
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*out)))
+
+
+def batch_spec(mesh, shape: tuple[int, ...]) -> NamedSharding:
+    """Inputs: shard dim 0 over the batch axes (when divisible)."""
+    axes = _fit(dctx.batch_axes(mesh), shape[0], mesh) if shape else None
+    spec = [axes if axes is None or len(axes) > 1 else axes[0]]
+    spec += [None] * (len(shape) - 1)
+    return NamedSharding(mesh, P(*spec))
+
+
+def set_rule(logical: str, axes: tuple[str, ...]) -> None:
+    """Override a logical-axis rule (e.g. sequence-sharded activations)."""
+    LOGICAL_AXES[logical] = axes

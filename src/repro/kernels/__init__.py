@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the retrieval hot spots the paper optimizes:
+pairwise distance matrices (construction + search) and the fused streaming
+distance+top-k datastore scan (decode-time kNN-LM retrieval).
+
+Layout per kernel: <name>.py (pl.pallas_call + BlockSpec), ops.py (jit'd
+dispatching wrapper), ref.py (pure-jnp oracle used in allclose sweeps).
+"""
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

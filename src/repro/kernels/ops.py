@@ -1,0 +1,69 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+Dispatch policy:
+* On TPU: compiled Pallas kernels with MXU-aligned default tiles.
+* Elsewhere (this container is CPU): ``interpret=True`` executes the kernel
+  body in Python for correctness validation, but is slow — so small shapes
+  and non-TPU hot paths route to the jnp reference (identical math; the
+  kernels are validated against it in tests/test_kernels_pairwise.py).
+
+Set ``repro_kernels_force_pallas`` (env REPRO_FORCE_PALLAS=1) to force the
+Pallas path everywhere — used by the kernel test sweeps.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.pairwise_l2 import (
+    pairwise_sq_l2_int8_pallas,
+    pairwise_sq_l2_pallas,
+)
+from repro.kernels.topk import knn_topk_pallas
+
+Array = jax.Array
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _force_pallas() -> bool:
+    return os.environ.get("REPRO_FORCE_PALLAS", "0") == "1"
+
+
+def pairwise_sq_l2(q: Array, x: Array) -> Array:
+    """(Q, D) x (N, D) -> (Q, N) squared L2 distances."""
+    if _on_tpu():
+        return pairwise_sq_l2_pallas(q, x)
+    if _force_pallas():
+        return pairwise_sq_l2_pallas(q, x, bq=64, bn=64, bd=64, interpret=True)
+    return ref.pairwise_sq_l2_ref(q, x)
+
+
+def pairwise_sq_l2_int8(q: Array, x_q: Array, scale: Array) -> Array:
+    """f32 queries vs int8 per-row-quantized datastore."""
+    if _on_tpu():
+        return pairwise_sq_l2_int8_pallas(q, x_q, scale)
+    if _force_pallas():
+        return pairwise_sq_l2_int8_pallas(q, x_q, scale, bq=64, bn=64, bd=64, interpret=True)
+    return ref.pairwise_sq_l2_int8_ref(q, x_q, scale)
+
+
+def knn_topk(q: Array, x: Array, *, k: int) -> tuple[Array, Array]:
+    """Fused streaming distance + top-k (values ascending, indices)."""
+    if _on_tpu():
+        return knn_topk_pallas(q, x, k=k)
+    if _force_pallas():
+        return knn_topk_pallas(q, x, k=k, bq=32, bn=64, interpret=True)
+    return ref.knn_topk_ref(q, x, k)
+
+
+def quantize_datastore(x: Array) -> tuple[Array, Array]:
+    """Symmetric per-row int8 quantization for the retrieval datastore."""
+    scale = jnp.maximum(jnp.max(jnp.abs(x), axis=1), 1e-8) / 127.0
+    xq = jnp.clip(jnp.round(x / scale[:, None]), -127, 127).astype(jnp.int8)
+    return xq, scale.astype(jnp.float32)

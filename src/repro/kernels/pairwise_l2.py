@@ -1,0 +1,143 @@
+"""Tiled squared-L2 pairwise-distance Pallas kernel.
+
+The retrieval hot loop (DBSCAN eps-graph, bucket bounds, bucket evaluation,
+datastore scan) is dominated by ``(Q, D) x (N, D) -> (Q, N)`` distance
+matrices.  On TPU this is an MXU matmul plus rank-1 norm updates:
+
+    d2[i, j] = ||q_i||^2 + ||x_j||^2 - 2 <q_i, x_j>
+
+Grid: (Q/bq, N/bn, D/bd) with accumulation over the contraction axis (last
+grid dimension; same output block revisited, ``dimension_semantics``
+marks it "arbitrary" on real TPU).  Per-step VMEM working set is
+``bq*bd + bn*bd + bq*bn`` f32 — defaults (256, 256, 256) give 768 KB,
+comfortably inside the ~16 MB v5e VMEM while keeping MXU tiles
+128-aligned.
+
+The int8 variant dequantizes the datastore tile in-register (per-row scale),
+halving (vs bf16) or quartering (vs f32) the HBM traffic of a datastore
+scan — the memory-roofline lever for decode-time retrieval.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+Array = jax.Array
+
+
+def _pairwise_kernel(q_ref, x_ref, o_ref):
+    """One (bq, bn) output tile, accumulated over D-axis grid steps."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    q = q_ref[...].astype(jnp.float32)  # (bq, bd)
+    x = x_ref[...].astype(jnp.float32)  # (bn, bd)
+    qq = jnp.sum(q * q, axis=1)  # (bq,)
+    xx = jnp.sum(x * x, axis=1)  # (bn,)
+    cross = jax.lax.dot_general(
+        q, x, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (bq, bn)
+    o_ref[...] += qq[:, None] + xx[None, :] - 2.0 * cross
+
+
+def _pairwise_int8_kernel(q_ref, x_ref, scale_ref, o_ref):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    q = q_ref[...].astype(jnp.float32)
+    x = x_ref[...].astype(jnp.float32) * scale_ref[...].astype(jnp.float32)[:, None]
+    qq = jnp.sum(q * q, axis=1)
+    xx = jnp.sum(x * x, axis=1)
+    cross = jax.lax.dot_general(
+        q, x, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    o_ref[...] += qq[:, None] + xx[None, :] - 2.0 * cross
+
+
+def _pad_to(a: Array, axis: int, mult: int, value: float = 0.0) -> Array:
+    pad = (-a.shape[axis]) % mult
+    if pad == 0:
+        return a
+    widths = [(0, 0)] * a.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(a, widths, constant_values=value)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bq", "bn", "bd", "interpret")
+)
+def pairwise_sq_l2_pallas(
+    q: Array,
+    x: Array,
+    *,
+    bq: int = 256,
+    bn: int = 256,
+    bd: int = 256,
+    interpret: bool = False,
+) -> Array:
+    """(Q, D) x (N, D) -> (Q, N) squared L2 distances (f32)."""
+    qn, d = q.shape
+    n = x.shape[0]
+    qp = _pad_to(q.astype(jnp.float32), 0, bq)
+    qp = _pad_to(qp, 1, bd)
+    xp = _pad_to(x.astype(jnp.float32), 0, bn)
+    xp = _pad_to(xp, 1, bd)
+    grid = (qp.shape[0] // bq, xp.shape[0] // bn, qp.shape[1] // bd)
+    out = pl.pallas_call(
+        _pairwise_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bq, bd), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bn, bd), lambda i, j, k: (j, k)),
+        ],
+        out_specs=pl.BlockSpec((bq, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((qp.shape[0], xp.shape[0]), jnp.float32),
+        interpret=interpret,
+    )(qp, xp)
+    return jnp.maximum(out[:qn, :n], 0.0)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bq", "bn", "bd", "interpret")
+)
+def pairwise_sq_l2_int8_pallas(
+    q: Array,
+    x_q: Array,
+    scale: Array,
+    *,
+    bq: int = 256,
+    bn: int = 256,
+    bd: int = 256,
+    interpret: bool = False,
+) -> Array:
+    """f32 queries vs int8 per-row-quantized datastore -> (Q, N) sq-L2."""
+    qn, d = q.shape
+    n = x_q.shape[0]
+    qp = _pad_to(q.astype(jnp.float32), 0, bq)
+    qp = _pad_to(qp, 1, bd)
+    xp = _pad_to(x_q, 0, bn)
+    xp = _pad_to(xp, 1, bd)
+    sp = _pad_to(scale.astype(jnp.float32), 0, bn)
+    grid = (qp.shape[0] // bq, xp.shape[0] // bn, qp.shape[1] // bd)
+    out = pl.pallas_call(
+        _pairwise_int8_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bq, bd), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bn, bd), lambda i, j, k: (j, k)),
+            pl.BlockSpec((bn,), lambda i, j, k: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bq, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((qp.shape[0], xp.shape[0]), jnp.float32),
+        interpret=interpret,
+    )(qp, xp, sp)
+    return jnp.maximum(out[:qn, :n], 0.0)

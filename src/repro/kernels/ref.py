@@ -1,0 +1,46 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each kernel in kernels/ is validated against these references over
+shape/dtype sweeps in tests/test_kernels_*.py (interpret mode on CPU,
+compiled on real TPU).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def pairwise_sq_l2_ref(q: Array, x: Array) -> Array:
+    """(Q, D) x (N, D) -> (Q, N) squared L2, via the MXU-friendly expansion."""
+    q = q.astype(jnp.float32)
+    x = x.astype(jnp.float32)
+    qq = jnp.sum(q * q, axis=-1)[:, None]
+    xx = jnp.sum(x * x, axis=-1)[None, :]
+    return jnp.maximum(qq + xx - 2.0 * (q @ x.T), 0.0)
+
+
+def knn_topk_ref(q: Array, x: Array, k: int) -> tuple[Array, Array]:
+    """Exact k smallest squared-L2 distances + indices: (Q, k), (Q, k)."""
+    d2 = pairwise_sq_l2_ref(q, x)
+    neg, idx = jax.lax.top_k(-d2, k)
+    return -neg, idx
+
+
+def masked_knn_topk_ref(q: Array, x: Array, mask: Array, k: int) -> tuple[Array, Array]:
+    """As knn_topk_ref but positions with mask==False excluded (dist=+inf)."""
+    d2 = pairwise_sq_l2_ref(q, x)
+    d2 = jnp.where(mask[None, :], d2, jnp.inf)
+    neg, idx = jax.lax.top_k(-d2, k)
+    return -neg, idx
+
+
+def pairwise_sq_l2_int8_ref(q: Array, x_q: Array, scale: Array) -> Array:
+    """Quantized-datastore distances: x stored int8 with per-row scales.
+
+    Dequantized row j is ``x_q[j] * scale[j]``; distances are computed against
+    the f32 queries.  (ADC-style retrieval; beyond-paper optimization.)
+    """
+    x = x_q.astype(jnp.float32) * scale[:, None].astype(jnp.float32)
+    return pairwise_sq_l2_ref(q, x)

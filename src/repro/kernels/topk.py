@@ -1,0 +1,120 @@
+"""Fused streaming distance + top-k Pallas kernel.
+
+For decode-time retrieval (kNN-LM) the naive two-pass plan
+
+    d2 = pairwise(q, datastore)   # (Q, N) materialized in HBM
+    topk(d2, k)                   # second HBM pass
+
+writes and re-reads an (Q, N) f32 matrix.  At datastore shard sizes of
+10^6+ rows this is pure memory-roofline waste.  This kernel keeps the
+running per-query top-k (values + global indices) resident in the output
+VMEM blocks while streaming datastore tiles through the MXU, so the (Q, N)
+matrix never exists.
+
+Grid: (Q/bq, N/bn); the N axis is sequential (accumulation over the same
+output block).  D is kept whole inside the block (padded to 128): retrieval
+key dims (<= 8K) fit VMEM comfortably at bq = bn = 256.
+
+Top-k maintenance: per N-tile, iteratively extract the k smallest of
+[running top-k | tile distances] (k is small and static — k extraction
+steps of a (bq, k + bn) min/argmin).  Indices are tracked through the same
+selection.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+Array = jax.Array
+
+
+def _knn_topk_kernel(q_ref, x_ref, o_val_ref, o_idx_ref, *, k: int, bn: int, n_real: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        o_val_ref[...] = jnp.full_like(o_val_ref, jnp.inf)
+        o_idx_ref[...] = jnp.full_like(o_idx_ref, -1)
+
+    q = q_ref[...].astype(jnp.float32)  # (bq, D)
+    x = x_ref[...].astype(jnp.float32)  # (bn, D)
+    qq = jnp.sum(q * q, axis=1)
+    xx = jnp.sum(x * x, axis=1)
+    cross = jax.lax.dot_general(
+        q, x, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    d2 = jnp.maximum(qq[:, None] + xx[None, :] - 2.0 * cross, 0.0)  # (bq, bn)
+    gidx = j * bn + jax.lax.broadcasted_iota(jnp.int32, (d2.shape[0], bn), 1)
+    d2 = jnp.where(gidx < n_real, d2, jnp.inf)
+
+    vals = jnp.concatenate([o_val_ref[...], d2], axis=1)  # (bq, k+bn)
+    idxs = jnp.concatenate([o_idx_ref[...], gidx], axis=1)
+    new_vals = []
+    new_idxs = []
+    for _ in range(k):
+        m = jnp.min(vals, axis=1)
+        a = jnp.argmin(vals, axis=1)
+        new_vals.append(m)
+        new_idxs.append(jnp.take_along_axis(idxs, a[:, None], axis=1)[:, 0])
+        vals = jnp.where(
+            jax.lax.broadcasted_iota(jnp.int32, vals.shape, 1) == a[:, None],
+            jnp.inf,
+            vals,
+        )
+    o_val_ref[...] = jnp.stack(new_vals, axis=1)
+    o_idx_ref[...] = jnp.stack(new_idxs, axis=1)
+
+
+def _pad_to(a: Array, axis: int, mult: int) -> Array:
+    pad = (-a.shape[axis]) % mult
+    if pad == 0:
+        return a
+    widths = [(0, 0)] * a.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(a, widths)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "bq", "bn", "interpret"))
+def knn_topk_pallas(
+    q: Array,
+    x: Array,
+    *,
+    k: int,
+    bq: int = 256,
+    bn: int = 256,
+    interpret: bool = False,
+) -> tuple[Array, Array]:
+    """k smallest squared-L2 distances of each query against the datastore.
+
+    Returns (values (Q, k) ascending, indices (Q, k)); indices are -1 / inf
+    when the datastore has fewer than k rows.
+    """
+    qn = q.shape[0]
+    n = x.shape[0]
+    qp = _pad_to(q.astype(jnp.float32), 0, bq)
+    qp = _pad_to(qp, 1, 128)
+    xp = _pad_to(x.astype(jnp.float32), 0, bn)
+    xp = _pad_to(xp, 1, 128)
+    grid = (qp.shape[0] // bq, xp.shape[0] // bn)
+    kernel = functools.partial(_knn_topk_kernel, k=k, bn=bn, n_real=n)
+    vals, idxs = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bq, qp.shape[1]), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, xp.shape[1]), lambda i, j: (j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bq, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((bq, k), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((qp.shape[0], k), jnp.float32),
+            jax.ShapeDtypeStruct((qp.shape[0], k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(qp, xp)
+    return vals[:qn], idxs[:qn]

@@ -1,0 +1,404 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import (jax locks the device
+# count at first initialization) — do not move them.
+
+"""Multi-pod dry-run: prove the distribution config is coherent.
+
+(No ``from __future__ import annotations`` here: the XLA_FLAGS lines above
+must stay the first statements of the module.)
+
+For every (architecture x input-shape) cell and mesh:
+  jit(step).lower(**abstract inputs).compile()
+succeeds, and we record memory_analysis / cost_analysis / collective traffic
+into experiments/dryrun/<arch>_<shape>_<mesh>.json — the roofline analysis
+(benchmarks/roofline.py, EXPERIMENTS.md) reads these artifacts.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-moe-235b-a22b --shape train_4k
+  python -m repro.launch.dryrun --all [--mesh single|multi|both]
+"""
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCH_IDS, SHAPES, get_config, shape_applicable
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.data.pipeline import make_batch_specs
+from repro.distributed import context as dctx
+from repro.distributed import sharding as shd
+from repro.distributed.estimator import _local_bytes, estimate_memory_bytes
+from repro.distributed.hlo_analysis import roofline_terms
+from repro.launch.mesh import make_production_mesh
+from repro.models.model import Model
+from repro.optim.optimizer import get_optimizer
+from repro.optim.schedule import cosine_with_warmup
+from repro.serve.retrieval import Datastore
+from repro.train.train_step import make_train_step
+
+OUT_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+
+def _struct(tree, shardings):
+    return jax.tree.map(
+        lambda x, s: jax.ShapeDtypeStruct(x.shape, x.dtype, sharding=s),
+        tree, shardings,
+    )
+
+
+def _abstract_datastore(cfg: ModelConfig, mesh) -> tuple[Datastore, Datastore]:
+    """Retrieval datastore stand-in, sharded over 'model' (struct, shardings)."""
+    r = cfg.retrieval
+    tp = dctx.model_axis_size(mesh)
+    n = r.datastore_size * tp
+    kd = r.key_dim or cfg.d_model
+    from jax.sharding import NamedSharding
+    from jax.sharding import PartitionSpec as P
+
+    row = NamedSharding(mesh, P("model"))
+    row2 = NamedSharding(mesh, P("model", None))
+    rep = NamedSharding(mesh, P())
+    key_dtype = jnp.int8 if r.quantized else jnp.float32
+    ds = Datastore(
+        keys=jax.ShapeDtypeStruct((n, kd), key_dtype, sharding=row2),
+        values=jax.ShapeDtypeStruct((n,), jnp.int32, sharding=row),
+        scale=(jax.ShapeDtypeStruct((n,), jnp.float32, sharding=row)
+               if r.quantized else None),
+        proj=jax.ShapeDtypeStruct((cfg.d_model, kd), jnp.float32, sharding=rep)
+        if kd != cfg.d_model else None,
+    )
+    return ds
+
+
+def build_cell(cfg: ModelConfig, shape: ShapeConfig, mesh):
+    """Returns (fn, arg_structs, meta) for one cell."""
+    model = Model(cfg)
+    params_shape = jax.eval_shape(lambda: model.init(jax.random.key(0)))
+    pshard = shd.param_shardings(params_shape, mesh)
+    meta = {"params_local": _local_bytes(params_shape, pshard),
+            "opt_local": 0, "cache_local": 0, "datastore_local": 0}
+    batch_specs = make_batch_specs(cfg, shape)
+    batch_structs = {
+        k: jax.ShapeDtypeStruct(v.shape, v.dtype, sharding=shd.batch_spec(mesh, v.shape))
+        for k, v in batch_specs.items()
+    }
+
+    if shape.kind == "train":
+        opt = get_optimizer(cfg.optimizer)
+        step_fn = make_train_step(
+            model, opt, cosine_with_warmup(3e-4, 100, 10_000),
+            grad_dtype="bfloat16" if cfg.param_dtype == "bfloat16" else "float32",
+        )
+        opt_shape = jax.eval_shape(opt.init, params_shape)
+        oshard = shd.param_shardings(opt_shape, mesh)
+        state_struct = {
+            "params": _struct(params_shape, pshard),
+            "opt": _struct(opt_shape, oshard),
+            "step": jax.ShapeDtypeStruct((), jnp.int32),
+        }
+        fn = jax.jit(step_fn, donate_argnums=(0,))
+        meta["opt_local"] = _local_bytes(opt_shape, oshard)
+        return fn, (state_struct, batch_structs), meta
+
+    if shape.kind == "prefill":
+        def prefill_fn(params, batch):
+            logits, cache = model.prefill(params, batch, max_len=shape.seq_len)
+            return logits[:, -1, :], cache
+
+        fn = jax.jit(prefill_fn)
+        cache_shape = jax.eval_shape(
+            lambda: model.init_cache(shape.global_batch, shape.seq_len))
+        meta["cache_local"] = _local_bytes(cache_shape, shd.cache_shardings(cache_shape, mesh))
+        return fn, (_struct(params_shape, pshard), batch_structs), meta
+
+    # decode: one token against a full-length cache, retrieval enabled
+    cache_shape = jax.eval_shape(
+        lambda: model.init_cache(shape.global_batch, shape.seq_len))
+    cshard = shd.cache_shardings(cache_shape, mesh)
+    cache_struct = _struct(cache_shape, cshard)
+    ds = _abstract_datastore(cfg, mesh)
+
+    def decode_fn(params, tokens, cache, pos, datastore):
+        return model.decode_step(params, tokens, cache, pos, datastore=datastore)
+
+    fn = jax.jit(decode_fn, donate_argnums=(2,))
+    pos_struct = jax.ShapeDtypeStruct((), jnp.int32)
+    meta["cache_local"] = _local_bytes(cache_shape, cshard)
+    ds_leaves = [x for x in (ds.keys, ds.values, ds.scale, ds.proj) if x is not None]
+    meta["datastore_local"] = sum(
+        x.size * x.dtype.itemsize for x in ds_leaves) // dctx.model_axis_size(mesh)
+    return fn, (_struct(params_shape, pshard), batch_structs["tokens"],
+                cache_struct, pos_struct, ds), meta
+
+
+# ---------------------------------------------------------------------------
+# Perf-iteration variants (§Perf hillclimbing): named config/rule mutations.
+# 'baseline' is the paper-faithful / naive-TP configuration.
+# ---------------------------------------------------------------------------
+
+def _v_baseline(cfg):
+    return cfg
+
+
+def _v_seqtp(cfg):
+    """Sequence-parallel TP: pin sub-layer outputs seq-sharded so the TP
+    combine lowers as reduce-scatter instead of all-reduce."""
+    return cfg.replace(constrain_sublayer_outputs=True, seq_shard_activations=True)
+
+
+def _v_zero3(cfg):
+    """Pure ZeRO-3: no tensor parallelism; params FSDP over every mesh axis.
+    Collectives become per-layer weight all-gathers + grad reduce-scatters."""
+    shd.set_rule("heads", ())
+    shd.set_rule("mlp", ())
+    shd.set_rule("vocab", ())
+    shd.set_rule("tensor", ())
+    shd.set_rule("fsdp", ("pod", "data", "model"))
+    return cfg.replace(seq_shard_activations=False, constrain_sublayer_outputs=False)
+
+
+def _v_zero3_seqtp(cfg):
+    """ZeRO-3 weights + seq-sharded activation residuals."""
+    cfg = _v_zero3(cfg)
+    return cfg.replace(seq_shard_activations=True, constrain_sublayer_outputs=True)
+
+
+def _v_ga16(cfg):
+    return cfg.replace(grad_accum=16)
+
+
+def _v_noremat(cfg):
+    return cfg.replace(remat="none")
+
+
+def _v_quantized_ds(cfg):
+    r = cfg.retrieval
+    return cfg.replace(retrieval=r.__class__(
+        enabled=r.enabled, k=r.k, lam=r.lam, temperature=r.temperature,
+        datastore_size=r.datastore_size, key_dim=r.key_dim, quantized=True))
+
+
+def _v_servetp(cfg):
+    """Inference sharding: weights replicated over the batch axes (no FSDP
+    gathers on the decode path), TP kept.  Weights-fit precondition checked
+    by the memory model in the record."""
+    shd.set_rule("fsdp", ())
+    return cfg
+
+
+def _v_servetp_int8(cfg):
+    return _v_quantized_ds(_v_servetp(cfg))
+
+
+def _v_zero3v(cfg):
+    """ZeRO-3 + seq-sharded residuals, but vocab/logits stay TP-sharded
+    (unsharded logits at 102k vocab re-introduce huge replicated tensors)."""
+    cfg = _v_zero3_seqtp(cfg).replace(grad_accum=1)
+    shd.set_rule("vocab", ("model",))
+    return cfg
+
+
+def _v_a2amoe(cfg):
+    """All-to-all EP dispatch: tokens travel to expert shards instead of
+    replicating compute over 'model' + psumming full (T_loc, D)."""
+    return cfg.replace(moe_a2a=True, grad_accum=1,
+                       seq_shard_activations=True, constrain_sublayer_outputs=True)
+
+
+VARIANTS = {
+    "baseline": _v_baseline,
+    "zero3v-ga1": _v_zero3v,
+    "a2amoe-ga1": _v_a2amoe,
+    "seqtp": _v_seqtp,
+    "zero3": _v_zero3,
+    "zero3-seqtp": _v_zero3_seqtp,
+    "zero3-seqtp-ga1": lambda c: _v_zero3_seqtp(c).replace(grad_accum=1),
+    "seqtp-ga2": lambda c: _v_seqtp(c).replace(grad_accum=2),
+    "seqtp-ga1": lambda c: _v_seqtp(c).replace(grad_accum=1),
+    "ga16": _v_ga16,
+    "ga2": lambda c: c.replace(grad_accum=2),
+    "ga1": lambda c: c.replace(grad_accum=1),
+    "noremat": _v_noremat,
+    "int8ds": _v_quantized_ds,
+    "servetp": _v_servetp,
+    "servetp-int8ds": _v_servetp_int8,
+}
+
+
+def _reset_rules() -> None:
+    shd.set_rule("heads", ("model",))
+    shd.set_rule("mlp", ("model",))
+    shd.set_rule("vocab", ("model",))
+    shd.set_rule("tensor", ("model",))
+    shd.set_rule("fsdp", ("pod", "data"))
+    shd.set_rule("seq", ())
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str,
+             variant: str = "baseline") -> dict:
+    _reset_rules()  # variants mutate the rule table
+    cfg = get_config(arch)
+    if shape_name in ("decode_32k", "long_500k"):
+        cfg = cfg.replace(retrieval=cfg.retrieval.__class__(
+            enabled=True, k=8, datastore_size=16384, key_dim=512))
+    cfg = VARIANTS[variant](cfg)
+    shape = SHAPES[shape_name]
+    rec: dict = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+                 "variant": variant}
+    if not shape_applicable(cfg, shape):
+        rec["status"] = "skipped"
+        rec["reason"] = "long_500k requires sub-quadratic attention (DESIGN.md §5)"
+        return rec
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    n_dev = int(np.prod(list(mesh.shape.values())))
+    t0 = time.time()
+    with dctx.use_mesh(mesh):
+        if cfg.seq_shard_activations:
+            shd.set_rule("seq", ("model",))
+        else:
+            shd.set_rule("seq", ())
+        fn, args, meta = build_cell(cfg, shape, mesh)
+        lowered = fn.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+    try:
+        mem = compiled.memory_analysis()
+        rec["memory"] = {
+            "argument_bytes": int(getattr(mem, "argument_size_in_bytes", 0)),
+            "output_bytes": int(getattr(mem, "output_size_in_bytes", 0)),
+            "temp_bytes": int(getattr(mem, "temp_size_in_bytes", 0)),
+            "peak_bytes": int(getattr(mem, "peak_memory_in_bytes", 0) or
+                              getattr(mem, "temp_size_in_bytes", 0)),
+            "code_bytes": int(getattr(mem, "generated_code_size_in_bytes", 0)),
+        }
+    except Exception as e:  # CPU backend may not implement it
+        rec["memory"] = {"error": str(e)}
+    try:
+        cost = compiled.cost_analysis()
+        if isinstance(cost, list):
+            cost = cost[0]
+        rec["cost"] = {k: float(v) for k, v in cost.items()
+                       if isinstance(v, (int, float)) and
+                       k in ("flops", "bytes accessed", "transcendentals",
+                             "bytes accessed output", "optimal_seconds")}
+    except Exception as e:
+        rec["cost"] = {"error": str(e)}
+    # Trip-count-aware whole-program costs parsed from the partitioned HLO
+    # (XLA CPU cost_analysis counts while bodies once — hlo_cost re-folds the
+    # call graph with scan trip counts; see distributed/hlo_cost.py).
+    from repro.distributed.hlo_cost import analyze_module
+
+    mc = analyze_module(compiled.as_text())
+    rec["hlo_cost"] = {
+        "flops": mc.flops,
+        "bytes": mc.bytes,
+        "collective_bytes": mc.coll_bytes,
+        "collective_by_op": mc.coll_by_op,
+        "n_while": mc.n_while,
+        "trip_counts": mc.trip_counts,
+    }
+    mem_model = estimate_memory_bytes(
+        cfg, shape, mesh,
+        params_local=meta["params_local"], opt_local=meta["opt_local"],
+        cache_local=meta["cache_local"], datastore_local=meta["datastore_local"])
+    rec["memory_model"] = mem_model
+    rec["local_bytes"] = dict(meta)
+    # memory term: analytic HBM-traffic model (the HLO byte count measures
+    # CPU-module fusion boundaries — a pessimistic bound; both recorded).
+    rec["roofline"] = roofline_terms(mc.flops, mem_model["total"], mc.coll_bytes)
+    rec["roofline_hlo_bytes"] = roofline_terms(mc.flops, mc.bytes, mc.coll_bytes)
+    rec["status"] = "ok"
+    rec["devices"] = n_dev
+    rec["lower_s"] = round(t_lower, 2)
+    rec["compile_s"] = round(t_compile, 2)
+    # analytic parameter counts + MODEL_FLOPS (6 N D) for the useful-compute ratio
+    cfg_model = Model(cfg)
+    pshape = jax.eval_shape(lambda: cfg_model.init(jax.random.key(0)))
+    total_param_bytes = 0
+    n_total = 0
+    n_expert = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(pshape)[0]:
+        pstr = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        total_param_bytes += leaf.size * leaf.dtype.itemsize
+        n_total += leaf.size
+        if "/moe/w_" in pstr and "/shared/" not in pstr:
+            n_expert += leaf.size
+    if cfg.moe is not None:
+        n_active = (n_total - n_expert) + n_expert * cfg.moe.top_k / cfg.moe.num_experts
+    else:
+        n_active = n_total
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+    mult = 6.0 if shape.kind == "train" else 2.0
+    model_flops_global = mult * n_active * tokens
+    rec["params_total"] = int(n_total)
+    rec["params_active"] = int(n_active)
+    rec["param_bytes_total"] = int(total_param_bytes)
+    rec["param_bytes_per_device_fsdp"] = int(total_param_bytes // n_dev)
+    rec["model_flops_global"] = model_flops_global
+    rec["model_flops_per_device"] = model_flops_global / n_dev
+    hlo_flops = rec.get("hlo_cost", {}).get("flops", 0.0)
+    rec["useful_compute_ratio"] = (
+        rec["model_flops_per_device"] / hlo_flops if hlo_flops else None
+    )
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="single")
+    ap.add_argument("--variant", choices=list(VARIANTS), default="baseline")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=str(OUT_DIR))
+    args = ap.parse_args()
+
+    out_dir = Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    cells = []
+    archs = ARCH_IDS if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    for arch in archs:
+        for shape in shapes:
+            for mesh_kind in meshes:
+                cells.append((arch, shape, mesh_kind))
+
+    failures = 0
+    for arch, shape, mesh_kind in cells:
+        tag = f"{arch}_{shape}_{mesh_kind}"
+        if args.variant != "baseline":
+            tag += f"__{args.variant}"
+        out_file = out_dir / f"{tag}.json"
+        try:
+            rec = run_cell(arch, shape, mesh_kind, args.variant)
+        except Exception as e:
+            rec = {"arch": arch, "shape": shape, "mesh": mesh_kind,
+                   "variant": args.variant,
+                   "status": "error", "error": f"{type(e).__name__}: {e}",
+                   "trace": traceback.format_exc()[-4000:]}
+            failures += 1
+        out_file.write_text(json.dumps(rec, indent=2))
+        status = rec["status"]
+        extra = ""
+        if status == "ok":
+            r = rec["roofline"]
+            extra = (f" compute={r['compute_s']:.3e}s mem={r['memory_s']:.3e}s "
+                     f"coll={r['collective_s']:.3e}s dom={r['dominant']}"
+                     f" compile={rec['compile_s']}s")
+        elif status == "error":
+            extra = " " + rec["error"][:160]
+        print(f"[{status:7s}] {tag}{extra}", flush=True)
+    print(f"done: {len(cells)} cells, {failures} failures", flush=True)
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,25 @@
+"""Production mesh construction.
+
+Single pod: (data=16, model=16) — 256 chips (TPU v5e pod).
+Multi-pod:  (pod=2, data=16, model=16) — 512 chips; the 'pod' axis carries
+pure data parallelism across the pod-interconnect (DCN), 'data' is
+intra-pod FSDP, 'model' is tensor/expert parallelism on ICI.
+
+A FUNCTION, not a module constant: importing this module never touches JAX
+device state (the dry-run must set XLA_FLAGS before any device query).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Whatever devices exist locally (tests / examples): data-parallel only."""
+    n = len(jax.devices())
+    return jax.make_mesh((n,), ("data",))

@@ -1,0 +1,74 @@
+"""Production training launcher.
+
+    python -m repro.launch.train --arch smollm-135m [--steps N] [--mesh host]
+
+Mesh selection:
+  host  — whatever devices exist locally (tests / CPU examples);
+  prod  — the production (16, 16) mesh (requires 256 devices);
+  auto  — elastic plan for the current device count (elastic.py), the
+          restart-after-rescale path: checkpoints are logical, so resuming
+          on a different fleet size re-shards automatically.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs import SHAPES, get_config, get_smoke_config
+from repro.data.pipeline import DataConfig, TokenPipeline
+from repro.distributed import context as dctx
+from repro.distributed.elastic import plan_mesh
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.models.model import Model
+from repro.optim.optimizer import get_optimizer
+from repro.optim.schedule import cosine_with_warmup
+from repro.train.train_step import init_train_state, make_train_step
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-135m")
+    ap.add_argument("--shape", default="train_4k", choices=list(SHAPES))
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--mesh", default="host", choices=["host", "prod", "auto"])
+    ap.add_argument("--smoke-model", action="store_true")
+    ap.add_argument("--batch", type=int, default=0, help="override global batch")
+    ap.add_argument("--seq", type=int, default=0, help="override seq len")
+    ap.add_argument("--ckpt-dir", default="checkpoints/launch")
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.smoke_model else get_config(args.arch)
+    shape = SHAPES[args.shape]
+    b = args.batch or shape.global_batch
+    s = args.seq or shape.seq_len
+
+    if args.mesh == "prod":
+        mesh = make_production_mesh()
+    elif args.mesh == "auto":
+        mesh = plan_mesh(len(jax.devices())).build()
+    else:
+        mesh = make_host_mesh()
+    print(f"mesh: {dict(mesh.shape)}  arch: {cfg.name}  batch={b} seq={s}")
+
+    with dctx.use_mesh(mesh if args.mesh != "host" or len(jax.devices()) > 1 else None):
+        model = Model(cfg)
+        opt = get_optimizer(cfg.optimizer)
+        step_fn = jax.jit(
+            make_train_step(model, opt, cosine_with_warmup(3e-4, 100, args.steps)),
+            donate_argnums=(0,),
+        )
+        pipeline = TokenPipeline(DataConfig(seq_len=s, global_batch=b,
+                                            vocab_size=cfg.vocab_size))
+        state = init_train_state(model, opt, jax.random.key(0))
+        trainer = Trainer(step_fn, pipeline, TrainerConfig(
+            total_steps=args.steps, ckpt_every=max(args.steps // 5, 10),
+            ckpt_dir=args.ckpt_dir))
+        _, report = trainer.run(state)
+        print(f"finished: {len(report.losses)} steps, "
+              f"final loss {report.losses[-1]:.4f}")
+
+
+if __name__ == "__main__":
+    main()

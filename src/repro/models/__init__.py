@@ -1,0 +1,5 @@
+"""Architecture zoo: unified Model wrapper over GQA/MLA transformers, MoE,
+Mamba-hybrid, RWKV6 and enc-dec families (see configs/ for the registry)."""
+from repro.models.model import Model, num_params
+
+__all__ = ["Model", "num_params"]

@@ -1,0 +1,238 @@
+"""Shared model layers: norms, RoPE, embeddings, MLPs, chunked (flash-style)
+attention.  All functions are pure (params-first), dtype-disciplined (params
+may be f32/bf16; compute dtype from config; reductions in f32), and shaped to
+shard well under GSPMD (see distributed/sharding.py for the axis rules)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+PyTree = Any
+
+
+def dtype_of(name: str):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16, "float16": jnp.float16}[name]
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, shape, dtype, scale: float | None = None):
+    fan_in = shape[-2] if len(shape) > 1 else shape[-1]
+    scale = scale if scale is not None else fan_in**-0.5
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+def stack_init(key, n: int, init_fn):
+    """Initialize n per-layer pytrees and stack leaves on a leading axis."""
+    keys = jax.random.split(key, n)
+    trees = [init_fn(k) for k in keys]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm / LayerNorm
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: Array, scale: Array, eps: float) -> Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    nrm = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (nrm * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def layer_norm(x: Array, scale: Array, bias: Array, eps: float) -> Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + scale.astype(jnp.float32)) + bias.astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: Array, positions: Array, theta: float) -> Array:
+    """x: (B, S, H, hd); positions: (B, S) int32."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # (hd/2,)
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # (B, S, hd/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(seq: int, dim: int) -> Array:
+    """Whisper-style fixed sinusoidal table (seq, dim)."""
+    pos = jnp.arange(seq, dtype=jnp.float32)[:, None]
+    div = jnp.exp(-jnp.log(10000.0) * jnp.arange(0, dim, 2, dtype=jnp.float32) / dim)
+    ang = pos * div[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def sinusoidal_at(positions: Array, dim: int) -> Array:
+    """Sinusoidal embedding at arbitrary integer positions (B, S) -> (B, S, dim)."""
+    div = jnp.exp(-jnp.log(10000.0) * jnp.arange(0, dim, 2, dtype=jnp.float32) / dim)
+    ang = positions.astype(jnp.float32)[..., None] * div
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key, d_model: int, d_ff: int, dtype) -> PyTree:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_in": dense_init(k1, (d_model, d_ff), dtype),
+        "w_gate": dense_init(k2, (d_model, d_ff), dtype),
+        "w_out": dense_init(k3, (d_ff, d_model), dtype),
+    }
+
+
+def mlp_swiglu(p: PyTree, x: Array) -> Array:
+    dt = x.dtype
+    h = jax.nn.silu(x @ p["w_gate"].astype(dt)) * (x @ p["w_in"].astype(dt))
+    return h @ p["w_out"].astype(dt)
+
+
+def init_mlp_gelu(key, d_model: int, d_ff: int, dtype) -> PyTree:
+    k1, k2 = jax.random.split(key)
+    return {
+        "w_in": dense_init(k1, (d_model, d_ff), dtype),
+        "b_in": jnp.zeros((d_ff,), dtype),
+        "w_out": dense_init(k2, (d_ff, d_model), dtype),
+        "b_out": jnp.zeros((d_model,), dtype),
+    }
+
+
+def mlp_gelu(p: PyTree, x: Array) -> Array:
+    dt = x.dtype
+    h = jax.nn.gelu(x @ p["w_in"].astype(dt) + p["b_in"].astype(dt))
+    return h @ p["w_out"].astype(dt) + p["b_out"].astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Chunked (flash-style) attention — O(S) memory, pure JAX
+# ---------------------------------------------------------------------------
+
+NEG_INF = -1e30
+
+
+def chunked_attention(
+    q: Array,
+    k: Array,
+    v: Array,
+    *,
+    causal: bool,
+    q_offset: Array | int = 0,
+    kv_block: int = 1024,
+) -> Array:
+    """Online-softmax attention.
+
+    q: (B, Sq, H, hd);  k, v: (B, Skv, KV, hd) with H % KV == 0.
+    Never materializes (Sq, Skv): scans KV blocks carrying running
+    (max, denom, accum) — the flash-attention recurrence.  ``q_offset`` is
+    the absolute position of q[0] for causal masking (prefill = 0).
+    """
+    b, sq, h, hd = q.shape
+    skv, kv = k.shape[1], k.shape[2]
+    groups = h // kv
+    scale = hd**-0.5
+    qf = (q.astype(jnp.float32) * scale).reshape(b, sq, kv, groups, hd)
+
+    n_blocks = -(-skv // kv_block)
+    pad = n_blocks * kv_block - skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kf = k.astype(jnp.float32).reshape(b, n_blocks, kv_block, kv, hd)
+    vf = v.astype(jnp.float32).reshape(b, n_blocks, kv_block, kv, hd)
+
+    q_pos = (jnp.asarray(q_offset) + jnp.arange(sq))[None, :, None]  # (1,Sq,1)
+
+    def body(carry, blk):
+        # NOTE: the block index lives in the CARRY, not in scan xs — if the
+        # mask depends only on xs, XLA hoists it out of the loop and
+        # materializes the full (n_blocks, B, Sq, ..., blk) boolean mask
+        # (O(S^2) bytes, gigabytes at 32k).  Carry-threading keeps it O(S).
+        m, denom, acc, blk_idx = carry
+        kb, vb = blk
+        # scores: (B, Sq, KV, G, blk)
+        s = jnp.einsum("bsvgh,bkvh->bsvgk", qf, kb)
+        kv_pos = (blk_idx * kv_block + jnp.arange(kv_block))[None, None, :]
+        mask = kv_pos <= q_pos if causal else (kv_pos < skv + jnp.zeros_like(q_pos))
+        mask = mask & (kv_pos < skv)  # drop padding
+        s = jnp.where(mask[:, :, None, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        denom = denom * corr + jnp.sum(p, axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum("bsvgk,bkvh->bsvgh", p, vb)
+        return (m_new, denom, acc, blk_idx + 1), None
+
+    init = (
+        jnp.full((b, sq, kv, groups), NEG_INF, jnp.float32),
+        jnp.zeros((b, sq, kv, groups), jnp.float32),
+        jnp.zeros((b, sq, kv, groups, hd), jnp.float32),
+        jnp.int32(0),
+    )
+    (m, denom, acc, _), _ = jax.lax.scan(
+        body, init, (kf.swapaxes(0, 1), vf.swapaxes(0, 1))
+    )
+    out = acc / jnp.maximum(denom, 1e-30)[..., None]
+    return out.reshape(b, sq, h, hd).astype(q.dtype)
+
+
+def decode_attention(q: Array, k_cache: Array, v_cache: Array, cur_len: Array) -> Array:
+    """Single-position attention against a (B, S, KV, hd) cache.
+
+    q: (B, 1, H, hd). Positions >= cur_len are masked. O(S) compute/memory.
+    """
+    b, _, h, hd = q.shape
+    s, kv = k_cache.shape[1], k_cache.shape[2]
+    groups = h // kv
+    qf = (q.astype(jnp.float32) * hd**-0.5).reshape(b, kv, groups, hd)
+    kf = k_cache.astype(jnp.float32)
+    scores = jnp.einsum("bvgh,bkvh->bvgk", qf, kf)  # (B, KV, G, S)
+    cur = cur_len[:, None] if jnp.ndim(cur_len) == 1 else cur_len
+    mask = jnp.arange(s)[None, :] < cur  # (B or 1, S)
+    scores = jnp.where(mask[:, None, None, :], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bvgk,bkvh->bvgh", p, v_cache.astype(jnp.float32))
+    return out.reshape(b, 1, h, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+
+def init_embedding(key, vocab: int, d_model: int, dtype) -> Array:
+    return (jax.random.normal(key, (vocab, d_model)) * 0.02).astype(dtype)
+
+
+def embed(table: Array, tokens: Array, compute_dtype) -> Array:
+    return table[tokens].astype(compute_dtype)
+
+
+def unembed(table: Array, x: Array) -> Array:
+    """Tied unembedding: logits in f32 for a stable softmax/loss."""
+    return jnp.einsum("bsd,vd->bsv", x.astype(jnp.float32), table.astype(jnp.float32))

@@ -1,0 +1,150 @@
+"""Mamba-1 selective SSM mixer (Jamba's sequence-mixing layer).
+
+Training/prefill run a ``lax.scan`` over time that computes the per-step
+discretization INSIDE the step — the (B, S, d_inner, d_state) tensor the
+naive formulation materializes would be terabytes at Jamba scale; the scan
+carries only (B, d_inner, d_state).  d_inner is sharded over 'tensor'
+(Megatron-style: in_proj column-parallel, out_proj row-parallel) so the
+recurrence is embarrassingly parallel across the mesh; the only collective
+is out_proj's psum, inserted by GSPMD.
+
+Decode carries (conv window, ssm state) — O(1) per token in context length,
+which is why Jamba runs the long_500k cell.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init
+
+Array = jax.Array
+PyTree = Any
+
+
+def _dims(cfg: ModelConfig) -> tuple[int, int, int, int]:
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    dt_rank = s.dt_rank or -(-cfg.d_model // 16)
+    return d_in, s.d_state, s.d_conv, dt_rank
+
+
+def init_mamba(key, cfg: ModelConfig, dtype) -> PyTree:
+    d = cfg.d_model
+    d_in, ds, dc, dtr = _dims(cfg)
+    ks = jax.random.split(key, 6)
+    # S4D-real initialization for A
+    a_init = jnp.broadcast_to(jnp.arange(1, ds + 1, dtype=jnp.float32), (d_in, ds))
+    return {
+        "in_proj": dense_init(ks[0], (d, 2 * d_in), dtype),
+        "conv_w": dense_init(ks[1], (dc, d_in), dtype, scale=dc**-0.5),
+        "conv_b": jnp.zeros((d_in,), dtype),
+        "x_proj": dense_init(ks[2], (d_in, dtr + 2 * ds), dtype),
+        "dt_proj": dense_init(ks[3], (dtr, d_in), dtype, scale=dtr**-0.5),
+        "dt_bias": jnp.log(jnp.expm1(jnp.exp(
+            jax.random.uniform(ks[4], (d_in,)) * (jnp.log(0.1) - jnp.log(0.001)) + jnp.log(0.001)
+        ))).astype(jnp.float32),
+        "a_log": jnp.log(a_init),
+        "d_skip": jnp.ones((d_in,), jnp.float32),
+        "out_proj": dense_init(ks[5], (d_in, d), dtype),
+    }
+
+
+def _conv_full(p: PyTree, u: Array, dc: int) -> Array:
+    """Causal depthwise conv over (B, S, d_in)."""
+    dt = u.dtype
+    pad = jnp.pad(u, ((0, 0), (dc - 1, 0), (0, 0)))
+    out = jax.lax.conv_general_dilated(
+        pad,
+        p["conv_w"].astype(dt)[:, None, :],  # (W, I=1, O=d_in)
+        window_strides=(1,),
+        padding="VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=u.shape[-1],
+    )
+    return out + p["conv_b"].astype(dt)
+
+
+def _ssm_step(h, inputs, a):
+    """h: (B, d_in, ds); one selective-SSM step (discretize + update)."""
+    xt, dtt, bt, ct = inputs  # (B,d_in) (B,d_in) (B,ds) (B,ds)
+    da = jnp.exp(dtt[..., None] * a[None])  # (B, d_in, ds)
+    dbx = (dtt * xt)[..., None] * bt[:, None, :]  # (B, d_in, ds)
+    h = da * h + dbx
+    y = jnp.einsum("bds,bs->bd", h, ct)
+    return h, y
+
+
+def mamba_forward(p: PyTree, x: Array, cfg: ModelConfig) -> tuple[Array, dict]:
+    """Full-sequence mixer. Returns (out (B,S,D), final_state dict)."""
+    d_in, ds, dc, dtr = _dims(cfg)
+    dt = x.dtype
+    b, s, _ = x.shape
+    xz = x @ p["in_proj"].astype(dt)
+    u, z = jnp.split(xz, 2, axis=-1)  # (B,S,d_in)
+    u = jax.nn.silu(_conv_full(p, u, dc))
+    proj = u @ p["x_proj"].astype(dt)
+    dt_in, b_in, c_in = jnp.split(proj, [dtr, dtr + ds], axis=-1)
+    delta = jax.nn.softplus(
+        dt_in.astype(jnp.float32) @ p["dt_proj"].astype(jnp.float32)
+        + p["dt_bias"].astype(jnp.float32)
+    )  # (B,S,d_in) f32
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))  # (d_in, ds)
+
+    uf = u.astype(jnp.float32)
+    h0 = jnp.zeros((b, d_in, ds), jnp.float32)
+    xs = (
+        uf.swapaxes(0, 1),
+        delta.swapaxes(0, 1),
+        b_in.astype(jnp.float32).swapaxes(0, 1),
+        c_in.astype(jnp.float32).swapaxes(0, 1),
+    )
+    h_last, ys = jax.lax.scan(lambda h, i: _ssm_step(h, i, a), h0, xs)
+    y = ys.swapaxes(0, 1)  # (B,S,d_in)
+    y = y + uf * p["d_skip"].astype(jnp.float32)[None, None, :]
+    out = (y.astype(dt) * jax.nn.silu(z)) @ p["out_proj"].astype(dt)
+    state = {
+        "conv": xz[..., :d_in][:, -(dc - 1):, :] if s >= dc - 1 else
+                jnp.pad(xz[..., :d_in], ((0, 0), (dc - 1 - s, 0), (0, 0))),
+        "ssm": h_last.astype(jnp.float32),
+    }
+    return out, state
+
+
+def init_mamba_state(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16) -> dict:
+    d_in, ds, dc, _ = _dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, dc - 1, d_in), dtype),
+        "ssm": jnp.zeros((batch, d_in, ds), jnp.float32),
+    }
+
+
+def mamba_decode(
+    p: PyTree, x: Array, cfg: ModelConfig, state: dict
+) -> tuple[Array, dict]:
+    """One-token step: x (B, 1, D)."""
+    d_in, ds, dc, dtr = _dims(cfg)
+    dt = x.dtype
+    xz = x[:, 0, :] @ p["in_proj"].astype(dt)  # (B, 2*d_in)
+    u, z = jnp.split(xz, 2, axis=-1)
+    window = jnp.concatenate([state["conv"].astype(dt), u[:, None, :]], axis=1)  # (B,dc,d_in)
+    u_c = jnp.einsum("bwd,wd->bd", window, p["conv_w"].astype(dt)) + p["conv_b"].astype(dt)
+    u_c = jax.nn.silu(u_c)
+    proj = u_c @ p["x_proj"].astype(dt)
+    dt_in, b_in, c_in = jnp.split(proj, [dtr, dtr + ds], axis=-1)
+    delta = jax.nn.softplus(
+        dt_in.astype(jnp.float32) @ p["dt_proj"].astype(jnp.float32)
+        + p["dt_bias"].astype(jnp.float32)
+    )
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    h, y = _ssm_step(
+        state["ssm"],
+        (u_c.astype(jnp.float32), delta, b_in.astype(jnp.float32), c_in.astype(jnp.float32)),
+        a,
+    )
+    y = y + u_c.astype(jnp.float32) * p["d_skip"].astype(jnp.float32)[None, :]
+    out = (y.astype(dt) * jax.nn.silu(z)) @ p["out_proj"].astype(dt)
+    return out[:, None, :], {"conv": window[:, 1:, :].astype(state["conv"].dtype), "ssm": h}

@@ -1,0 +1,225 @@
+"""Unified model wrapper: embedding/frontend -> stages -> head, with
+train-forward, prefill and decode entry points, plus the kNN-LM retrieval
+hook (the paper's technique) at the head during decode."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import logical_constraint
+from repro.models.layers import (
+    dense_init,
+    dtype_of,
+    init_embedding,
+    layer_norm,
+    rms_norm,
+    sinusoidal_at,
+    sinusoidal_positions,
+)
+from repro.models.transformer import (
+    Stage,
+    init_stage,
+    init_stage_cache,
+    plan_stages,
+    stage_decode,
+    stage_forward,
+)
+
+Array = jax.Array
+PyTree = Any
+
+
+@dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+
+    # ---------------------------------------------------------------- init
+    @property
+    def stages(self) -> list[Stage]:
+        return plan_stages(self.cfg)
+
+    @property
+    def enc_stage(self) -> Stage | None:
+        c = self.cfg
+        if c.family != "encdec":
+            return None
+        return Stage(("wenc",), c.encoder_layers, c.scan_layers)
+
+    def init(self, rng: Array) -> PyTree:
+        c = self.cfg
+        pdt = dtype_of(c.param_dtype)
+        keys = jax.random.split(rng, 8 + len(self.stages))
+        params: dict[str, Any] = {
+            "embed": init_embedding(keys[0], c.padded_vocab, c.d_model, pdt),
+            "final_norm": jnp.zeros((c.d_model,), jnp.float32),
+        }
+        if not c.tie_embeddings:
+            params["lm_head"] = dense_init(keys[1], (c.d_model, c.padded_vocab), pdt)
+        if c.family == "encdec":
+            params["final_norm_bias"] = jnp.zeros((c.d_model,), jnp.float32)
+            params["frame_proj"] = dense_init(keys[2], (c.d_model, c.d_model), pdt)
+            params["enc"] = init_stage(self.enc_stage, keys[3], c, pdt)
+            params["enc_norm"] = jnp.zeros((c.d_model,), jnp.float32)
+            params["enc_norm_bias"] = jnp.zeros((c.d_model,), jnp.float32)
+        if c.frontend == "vision_stub":
+            params["patch_proj"] = dense_init(keys[4], (c.d_model, c.d_model), pdt)
+        params["stages"] = [
+            init_stage(st, keys[8 + i], c, pdt) for i, st in enumerate(self.stages)
+        ]
+        return params
+
+    # ------------------------------------------------------------- helpers
+    def _embed_tokens(self, params: PyTree, tokens: Array, pos0: Array | int = 0) -> Array:
+        cdt = dtype_of(self.cfg.compute_dtype)
+        x = params["embed"][tokens].astype(cdt)
+        if self.cfg.family == "encdec":
+            # whisper: learned-position stand-in (sinusoidal, offset-aware)
+            positions = pos0 + jnp.arange(tokens.shape[1])[None, :]
+            x = x + sinusoidal_at(positions, self.cfg.d_model).astype(cdt)
+        return logical_constraint(x, ("batch", "seq", "embed"))
+
+    def _frontend(self, params: PyTree, x: Array, batch: dict) -> Array:
+        """vlm stub: precomputed patch embeddings replace leading positions."""
+        c = self.cfg
+        if c.frontend == "vision_stub" and "patches" in batch:
+            cdt = dtype_of(c.compute_dtype)
+            patches = batch["patches"].astype(cdt) @ params["patch_proj"].astype(cdt)
+            n = patches.shape[1]
+            x = jnp.concatenate([patches, x[:, n:, :]], axis=1)
+        return x
+
+    def _encode(self, params: PyTree, frames: Array) -> Array:
+        """audio stub: precomputed frame embeddings -> encoder stack."""
+        c = self.cfg
+        cdt = dtype_of(c.compute_dtype)
+        x = frames.astype(cdt) @ params["frame_proj"].astype(cdt)
+        x = x + sinusoidal_positions(x.shape[1], c.d_model)[None].astype(cdt)
+        positions = jnp.broadcast_to(jnp.arange(x.shape[1]), x.shape[:2])
+        aux: dict[str, Array] = {}
+        x, _ = stage_forward(self.enc_stage, params["enc"], x, c, positions, aux)
+        return layer_norm(x, params["enc_norm"], params["enc_norm_bias"], c.norm_eps)
+
+    def _head(self, params: PyTree, x: Array) -> Array:
+        c = self.cfg
+        if c.family == "encdec":
+            x = layer_norm(x, params["final_norm"], params["final_norm_bias"], c.norm_eps)
+        else:
+            x = rms_norm(x, params["final_norm"], c.norm_eps)
+        if c.tie_embeddings:
+            logits = jnp.einsum(
+                "bsd,vd->bsv", x.astype(jnp.float32), params["embed"].astype(jnp.float32)
+            )
+        else:
+            logits = x.astype(jnp.float32) @ params["lm_head"].astype(jnp.float32)
+        return logical_constraint(logits, ("batch", "seq", "vocab"))
+
+    # ------------------------------------------------------------- forward
+    def forward(
+        self, params: PyTree, batch: dict, *, collect_cache: bool = False
+    ) -> tuple[Array, dict, PyTree | None]:
+        """Teacher-forced forward (train / prefill).
+
+        batch: {'tokens': (B,S) i32, 'frames': (B,S_enc,D)?, 'patches': ?}
+        Returns (logits (B,S,V), aux, caches or None).
+        """
+        c = self.cfg
+        tokens = batch["tokens"]
+        x = self._embed_tokens(params, tokens)
+        x = self._frontend(params, x, batch)
+        enc_out = self._encode(params, batch["frames"]) if c.family == "encdec" else None
+        positions = jnp.broadcast_to(jnp.arange(tokens.shape[1]), tokens.shape)
+        aux: dict[str, Array] = {}
+        caches = []
+        for st, sp in zip(self.stages, params["stages"]):
+            x, cache = stage_forward(
+                st, sp, x, c, positions, aux,
+                collect_cache=collect_cache, enc_out=enc_out,
+            )
+            caches.append(cache)
+        logits = self._head(params, x)
+        return logits, aux, (caches if collect_cache else None)
+
+    # ------------------------------------------------------------- prefill
+    def prefill(
+        self, params: PyTree, batch: dict, *, max_len: int
+    ) -> tuple[Array, PyTree]:
+        """Process the prompt; return (logits (B,S,V), cache padded to
+        ``max_len``) ready for decode_step at pos = prompt_len."""
+        tokens = batch["tokens"]
+        logits, _, caches = self.forward(params, batch, collect_cache=True)
+        template = self.init_cache(tokens.shape[0], max_len)
+
+        def pad_like(got, tmpl):
+            if got is None:
+                return tmpl
+            pads = [(0, t - g) for g, t in zip(got.shape, tmpl.shape)]
+            return jnp.pad(got.astype(tmpl.dtype), pads)
+
+        cache = jax.tree.map(pad_like, caches, template)
+        return logits, cache
+
+    # -------------------------------------------------------------- decode
+    def init_cache(self, batch_size: int, max_len: int) -> PyTree:
+        cdt = dtype_of(self.cfg.compute_dtype)
+        return [
+            init_stage_cache(st, self.cfg, batch_size, max_len, cdt)
+            for st in self.stages
+        ]
+
+    def decode_step(
+        self,
+        params: PyTree,
+        tokens: Array,  # (B, 1)
+        cache: PyTree,
+        pos: Array,  # scalar: current position
+        *,
+        datastore: PyTree | None = None,
+    ) -> tuple[Array, PyTree]:
+        """One decode step. Returns (logits (B, V), new_cache).
+
+        When ``datastore`` is provided and cfg.retrieval.enabled, the output
+        distribution is interpolated with the kNN-LM distribution retrieved
+        from the paper's overlap-optimized datastore (serve/retrieval.py).
+        """
+        c = self.cfg
+        x = self._embed_tokens(params, tokens, pos0=pos)
+        aux: dict[str, Array] = {}
+        new_caches = []
+        for st, sp, sc in zip(self.stages, params["stages"], cache):
+            x, nc = stage_decode(st, sp, x, c, sc, pos, aux)
+            new_caches.append(nc)
+        hidden = x  # (B, 1, D) pre-head hidden state = retrieval query
+        logits = self._head(params, x)[:, 0, :]
+        if datastore is not None and c.retrieval.enabled:
+            from repro.serve.retrieval import knn_interpolate
+
+            logits = knn_interpolate(logits, hidden[:, 0, :], datastore, c)
+        return logits, new_caches
+
+    # ---------------------------------------------------------------- loss
+    def loss(self, params: PyTree, batch: dict) -> tuple[Array, dict]:
+        """Mean next-token CE (+ router aux losses). batch needs 'targets'."""
+        c = self.cfg
+        logits, aux, _ = self.forward(params, batch)
+        targets = batch["targets"]
+        mask = (targets >= 0) & (targets < c.vocab_size)
+        tsafe = jnp.clip(targets, 0, c.padded_vocab - 1)
+        logz = jax.scipy.special.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, tsafe[..., None], axis=-1)[..., 0]
+        ce = (logz - gold) * mask
+        denom = jnp.maximum(mask.sum(), 1)
+        loss = ce.sum() / denom
+        metrics = {"ce": loss, "tokens": denom}
+        if c.moe is not None:
+            loss = loss + c.moe.router_aux_coef * aux.get("router_aux", 0.0)
+            loss = loss + c.moe.router_z_coef * aux.get("router_z", 0.0)
+            metrics["router_aux"] = aux.get("router_aux", 0.0)
+        return loss, metrics
+
+
+def num_params(params: PyTree) -> int:
+    return sum(x.size for x in jax.tree.leaves(params))

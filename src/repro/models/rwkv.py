@@ -1,0 +1,170 @@
+"""RWKV-6 "Finch" block (attention-free, data-dependent per-channel decay).
+
+Time-mix recurrence per head (state S in R^{hd x hd}):
+
+    y_t = r_t ( S_t + (u * k_t) v_t^T )
+    S_{t+1} = diag(w_t) S_t + k_t v_t^T          (w_t data-dependent)
+
+Training scans over time carrying (B, H, hd, hd) — O(1) in sequence length,
+which is why rwkv6 runs the long_500k cell trivially.  Token-shift mixing
+uses the Finch data-dependent lerp (ddlerp) with the 5-way low-rank delta.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init
+
+Array = jax.Array
+PyTree = Any
+
+_MIX_NAMES = ("r", "k", "v", "g", "w")
+
+
+def _dims(cfg: ModelConfig) -> tuple[int, int]:
+    hd = cfg.rwkv.head_dim
+    return cfg.d_model // hd, hd  # (heads, head_dim)
+
+
+def init_time_mix(key, cfg: ModelConfig, dtype) -> PyTree:
+    d = cfg.d_model
+    h, hd = _dims(cfg)
+    r = cfg.rwkv
+    ks = jax.random.split(key, 12)
+    return {
+        "mu_x": jnp.zeros((d,), jnp.float32),
+        "mu": jnp.zeros((5, d), jnp.float32),  # r,k,v,g,w base lerp factors
+        "lora_a": dense_init(ks[0], (d, 5 * 32), dtype),
+        "lora_b": dense_init(ks[1], (5, 32, d), dtype, scale=32**-0.5),
+        "wr": dense_init(ks[2], (d, d), dtype),
+        "wk": dense_init(ks[3], (d, d), dtype),
+        "wv": dense_init(ks[4], (d, d), dtype),
+        "wg": dense_init(ks[5], (d, d), dtype),
+        "wo": dense_init(ks[6], (d, d), dtype),
+        "w0": jnp.full((d,), -5.0, jnp.float32),  # decay bias (slow decay init)
+        "wd_a": dense_init(ks[7], (d, r.decay_lora), dtype),
+        "wd_b": dense_init(ks[8], (r.decay_lora, d), dtype, scale=r.decay_lora**-0.5),
+        "u": (jax.random.normal(ks[9], (h, hd)) * 0.1).astype(jnp.float32),
+        "ln_scale": jnp.zeros((d,), jnp.float32),  # per-head group norm
+        "ln_bias": jnp.zeros((d,), jnp.float32),
+    }
+
+
+def init_channel_mix(key, cfg: ModelConfig, dtype) -> PyTree:
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "mu_k": jnp.zeros((d,), jnp.float32),
+        "mu_r": jnp.zeros((d,), jnp.float32),
+        "wk": dense_init(ks[0], (d, f), dtype),
+        "wv": dense_init(ks[1], (f, d), dtype),
+        "wr": dense_init(ks[2], (d, d), dtype),
+    }
+
+
+def _ddlerp(p: PyTree, x: Array, xx: Array) -> list[Array]:
+    """Finch data-dependent lerp: 5 mixed inputs (r,k,v,g,w)."""
+    dt = x.dtype
+    diff = xx - x
+    xm = x + diff * p["mu_x"].astype(dt)
+    lo = jnp.tanh(xm @ p["lora_a"].astype(dt))  # (B,S,5*32)
+    lo = lo.reshape(*lo.shape[:-1], 5, 32)
+    delta = jnp.einsum("bsfr,frd->bsfd", lo, p["lora_b"].astype(dt))  # (B,S,5,D)
+    outs = []
+    for i in range(5):
+        mi = p["mu"][i].astype(dt) + delta[..., i, :]
+        outs.append(x + diff * mi)
+    return outs
+
+
+def _group_norm(y: Array, scale: Array, bias: Array, h: int, eps: float = 64e-5) -> Array:
+    """Per-head LayerNorm on (B, S, D) viewed as (..., H, hd)."""
+    b, s, d = y.shape
+    yf = y.astype(jnp.float32).reshape(b, s, h, d // h)
+    mu = yf.mean(-1, keepdims=True)
+    var = ((yf - mu) ** 2).mean(-1, keepdims=True)
+    yn = (yf - mu) * jax.lax.rsqrt(var + eps)
+    yn = yn.reshape(b, s, d)
+    return (yn * (1.0 + scale.astype(jnp.float32)) + bias.astype(jnp.float32)).astype(y.dtype)
+
+
+def _rkvgw(p: PyTree, x: Array, xx: Array, cfg: ModelConfig):
+    h, hd = _dims(cfg)
+    dt = x.dtype
+    xr, xk, xv, xg, xw = _ddlerp(p, x, xx)
+    b, s, d = x.shape
+    r = (xr @ p["wr"].astype(dt)).reshape(b, s, h, hd)
+    k = (xk @ p["wk"].astype(dt)).reshape(b, s, h, hd)
+    v = (xv @ p["wv"].astype(dt)).reshape(b, s, h, hd)
+    g = jax.nn.silu(xg @ p["wg"].astype(dt))
+    wdec = p["w0"].astype(jnp.float32) + (
+        jnp.tanh(xw @ p["wd_a"].astype(dt)).astype(jnp.float32)
+        @ p["wd_b"].astype(jnp.float32)
+    )
+    w = jnp.exp(-jnp.exp(wdec)).reshape(b, s, h, hd)  # in (0,1), data-dependent
+    return r, k, v, g, w
+
+
+def _wkv_step(S, inputs, u):
+    """S: (B, H, hd_k, hd_v)."""
+    r, k, v, w = inputs  # each (B, H, hd)
+    kv = k[..., :, None] * v[..., None, :]  # (B,H,hd,hd)
+    y = jnp.einsum("bhk,bhkv->bhv", r, S + u[None, :, :, None] * kv)
+    S = w[..., :, None] * S + kv
+    return S, y
+
+
+def time_mix_forward(
+    p: PyTree, x: Array, cfg: ModelConfig, state: dict | None = None
+) -> tuple[Array, dict]:
+    """Full-sequence time-mix. state carries (shift, wkv) for continuation."""
+    h, hd = _dims(cfg)
+    b, s, d = x.shape
+    prev = state["shift"] if state else jnp.zeros((b, 1, d), x.dtype)
+    xx = jnp.concatenate([prev, x[:, :-1, :]], axis=1)  # token shift
+    r, k, v, g, w = _rkvgw(p, x, xx, cfg)
+    s0 = state["wkv"] if state else jnp.zeros((b, h, hd, hd), jnp.float32)
+    xs = (
+        r.astype(jnp.float32).swapaxes(0, 1),
+        k.astype(jnp.float32).swapaxes(0, 1),
+        v.astype(jnp.float32).swapaxes(0, 1),
+        w.astype(jnp.float32).swapaxes(0, 1),
+    )
+    s_last, ys = jax.lax.scan(lambda c, i: _wkv_step(c, i, p["u"]), s0, xs)
+    y = ys.swapaxes(0, 1).reshape(b, s, d).astype(x.dtype)
+    y = _group_norm(y, p["ln_scale"], p["ln_bias"], h) * g
+    out = y @ p["wo"].astype(x.dtype)
+    return out, {"shift": x[:, -1:, :], "wkv": s_last}
+
+
+def time_mix_decode(p: PyTree, x: Array, cfg: ModelConfig, state: dict) -> tuple[Array, dict]:
+    """x: (B, 1, D) — single step via the same scan with s=1."""
+    return time_mix_forward(p, x, cfg, state)
+
+
+def channel_mix_forward(
+    p: PyTree, x: Array, cfg: ModelConfig, state: dict | None = None
+) -> tuple[Array, dict]:
+    dt = x.dtype
+    b, s, d = x.shape
+    prev = state["shift"] if state else jnp.zeros((b, 1, d), x.dtype)
+    xx = jnp.concatenate([prev, x[:, :-1, :]], axis=1)
+    xk = x + (xx - x) * p["mu_k"].astype(dt)
+    xr = x + (xx - x) * p["mu_r"].astype(dt)
+    kk = jnp.square(jax.nn.relu(xk @ p["wk"].astype(dt)))
+    out = jax.nn.sigmoid(xr @ p["wr"].astype(dt)) * (kk @ p["wv"].astype(dt))
+    return out, {"shift": x[:, -1:, :]}
+
+
+def init_rwkv_state(cfg: ModelConfig, batch: int, dtype) -> dict:
+    h, hd = _dims(cfg)
+    d = cfg.d_model
+    return {
+        "tm": {"shift": jnp.zeros((batch, 1, d), dtype),
+               "wkv": jnp.zeros((batch, h, hd, hd), jnp.float32)},
+        "cm": {"shift": jnp.zeros((batch, 1, d), dtype)},
+    }

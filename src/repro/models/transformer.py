@@ -1,0 +1,385 @@
+"""Block assembly for every architecture family.
+
+A model is a sequence of STAGES; each stage is a repeated UNIT of one or
+more sub-layer kinds.  Homogeneous stages are executed with
+``lax.scan`` over stacked parameters (weights carry a leading ``n_repeat``
+axis) so the HLO stays O(unit) instead of O(layers) — mandatory for the
+95-layer configs on the 512-device dry-run, and the production-idiomatic
+layout (MaxText-style).  Units with interleaved kinds (Jamba's 1-attention:
+7-mamba groups with alternating dense/MoE FFNs) unroll the heterogeneous
+pattern INSIDE the scanned unit body.
+
+Sub-layer kinds:
+  gqa_dense / gqa_moe    — GQA attention + SwiGLU or MoE FFN (llama family)
+  mla_dense / mla_moe    — DeepSeek-V2 latent attention + FFN
+  mamba_dense / mamba_moe— Mamba mixer + FFN (Jamba)
+  rwkv                   — RWKV6 time-mix + channel-mix
+  wenc / wdec            — whisper encoder / decoder (LayerNorm + GELU)
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import logical_constraint
+from repro.models import attention as attn
+from repro.models import mamba as mam
+from repro.models import moe as moe_lib
+from repro.models import rwkv as rwkv_lib
+from repro.models.layers import (
+    init_mlp,
+    init_mlp_gelu,
+    layer_norm,
+    mlp_gelu,
+    mlp_swiglu,
+    rms_norm,
+    stack_init,
+)
+
+Array = jax.Array
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# Stage planning
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class Stage:
+    unit: tuple[str, ...]  # sub-layer kinds within one unit
+    n: int                 # unit repeats
+    scan: bool
+
+
+def plan_stages(cfg: ModelConfig) -> list[Stage]:
+    if cfg.family == "encdec":
+        return [Stage(("wdec",), cfg.num_layers, cfg.scan_layers)]
+    if cfg.family == "ssm":
+        return [Stage(("rwkv",), cfg.num_layers, cfg.scan_layers)]
+    if cfg.family == "hybrid":
+        gsize = cfg.attn_period
+        assert cfg.num_layers % gsize == 0
+        unit = []
+        for j in range(gsize):
+            mix = "attn" if j == cfg.attn_offset else "mamba"
+            ffn = "moe" if cfg.is_moe_layer(j) else "dense"
+            unit.append(("gqa" if mix == "attn" else "mamba") + "_" + ffn)
+        return [Stage(tuple(unit), cfg.num_layers // gsize, cfg.scan_layers)]
+    base = "mla" if cfg.mla is not None else "gqa"
+    if cfg.moe is None:
+        return [Stage((f"{base}_dense",), cfg.num_layers, cfg.scan_layers)]
+    stages = []
+    fd = cfg.moe.first_dense
+    if fd:
+        stages.append(Stage((f"{base}_dense",), fd, False))
+    stages.append(Stage((f"{base}_moe",), cfg.num_layers - fd, cfg.scan_layers))
+    return stages
+
+
+# ---------------------------------------------------------------------------
+# Sub-layer init / forward / decode
+# ---------------------------------------------------------------------------
+
+
+def _init_sublayer(kind: str, key, cfg: ModelConfig, dtype) -> PyTree:
+    d = cfg.d_model
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    if kind == "rwkv":
+        return {
+            "ln1": jnp.zeros((d,), jnp.float32),
+            "tm": rwkv_lib.init_time_mix(k1, cfg, dtype),
+            "ln2": jnp.zeros((d,), jnp.float32),
+            "cm": rwkv_lib.init_channel_mix(k2, cfg, dtype),
+        }
+    if kind == "wenc":
+        return {
+            "ln1": jnp.zeros((d,), jnp.float32), "lb1": jnp.zeros((d,), jnp.float32),
+            "attn": attn.init_gqa(k1, cfg, dtype),
+            "ln2": jnp.zeros((d,), jnp.float32), "lb2": jnp.zeros((d,), jnp.float32),
+            "mlp": init_mlp_gelu(k2, d, cfg.d_ff, dtype),
+        }
+    if kind == "wdec":
+        return {
+            "ln1": jnp.zeros((d,), jnp.float32), "lb1": jnp.zeros((d,), jnp.float32),
+            "attn": attn.init_gqa(k1, cfg, dtype),
+            "ln2": jnp.zeros((d,), jnp.float32), "lb2": jnp.zeros((d,), jnp.float32),
+            "cross": attn.init_gqa(k2, cfg, dtype),
+            "ln3": jnp.zeros((d,), jnp.float32), "lb3": jnp.zeros((d,), jnp.float32),
+            "mlp": init_mlp_gelu(k3, d, cfg.d_ff, dtype),
+        }
+    mix, ffn = kind.split("_")
+    p = {"ln1": jnp.zeros((d,), jnp.float32), "ln2": jnp.zeros((d,), jnp.float32)}
+    if mix == "gqa":
+        p["attn"] = attn.init_gqa(k1, cfg, dtype)
+    elif mix == "mla":
+        p["attn"] = attn.init_mla(k1, cfg, dtype)
+    elif mix == "mamba":
+        p["mamba"] = mam.init_mamba(k1, cfg, dtype)
+    if ffn == "dense":
+        p["mlp"] = init_mlp(k2, d, cfg.d_ff, dtype)
+    else:
+        p["moe"] = moe_lib.init_moe(k2, cfg, dtype)
+    return p
+
+
+def _ffn(kind: str, p: PyTree, x: Array, cfg: ModelConfig, aux: dict) -> Array:
+    if kind.endswith("_moe"):
+        out, losses = moe_lib.moe_ffn(p["moe"], x, cfg)
+        aux["router_aux"] = aux.get("router_aux", 0.0) + losses["router_aux"]
+        aux["router_z"] = aux.get("router_z", 0.0) + losses["router_z"]
+        return out
+    return mlp_swiglu(p["mlp"], x)
+
+
+def sublayer_forward(
+    kind: str,
+    p: PyTree,
+    x: Array,
+    cfg: ModelConfig,
+    positions: Array,
+    aux: dict,
+    *,
+    collect_cache: bool,
+    enc_out: Array | None = None,
+) -> tuple[Array, PyTree | None]:
+    eps = cfg.norm_eps
+    x = logical_constraint(x, ("batch", "seq", "embed"))
+
+    def _post(h):
+        # sequence-parallel TP (Korthikanti et al.): pin sub-layer outputs to
+        # the seq-sharded layout so GSPMD lowers the TP combine as
+        # reduce-scatter instead of all-reduce (halves the wire bytes).
+        if cfg.constrain_sublayer_outputs:
+            return logical_constraint(h, ("batch", "seq", "embed"))
+        return h
+
+    cache = None
+    if kind == "rwkv":
+        h, st_tm = rwkv_lib.time_mix_forward(p["tm"], rms_norm(x, p["ln1"], eps), cfg)
+        x = x + _post(h)
+        h, st_cm = rwkv_lib.channel_mix_forward(p["cm"], rms_norm(x, p["ln2"], eps), cfg)
+        x = x + _post(h)
+        cache = {"tm": st_tm, "cm": st_cm} if collect_cache else None
+    elif kind == "wenc":
+        h, _ = attn.gqa_forward(
+            p["attn"], layer_norm(x, p["ln1"], p["lb1"], eps), cfg, positions,
+            causal=False, rope=False,
+        )
+        x = x + h
+        x = x + mlp_gelu(p["mlp"], layer_norm(x, p["ln2"], p["lb2"], eps))
+    elif kind == "wdec":
+        h, (k, v) = attn.gqa_forward(
+            p["attn"], layer_norm(x, p["ln1"], p["lb1"], eps), cfg, positions,
+            causal=True, rope=False,
+        )
+        x = x + h
+        dt = x.dtype
+        ck = jnp.einsum("bsd,dvk->bsvk", enc_out, p["cross"]["wk"].astype(dt))
+        cv = jnp.einsum("bsd,dvk->bsvk", enc_out, p["cross"]["wv"].astype(dt))
+        x = x + attn.gqa_cross_forward(
+            p["cross"], layer_norm(x, p["ln2"], p["lb2"], eps), ck, cv, cfg, positions
+        )
+        x = x + mlp_gelu(p["mlp"], layer_norm(x, p["ln3"], p["lb3"], eps))
+        if collect_cache:
+            cache = {"k": k, "v": v, "ck": ck, "cv": cv}
+    else:
+        mix = kind.split("_")[0]
+        if mix in ("gqa", "mla"):
+            fwd = attn.mla_forward if mix == "mla" else attn.gqa_forward
+            h, kv = fwd(p["attn"], rms_norm(x, p["ln1"], eps), cfg, positions)
+            if collect_cache:
+                cache = (
+                    {"c_kv": kv[0], "k_rope": kv[1]} if mix == "mla"
+                    else {"k": kv[0], "v": kv[1]}
+                )
+        else:  # mamba
+            h, st = mam.mamba_forward(p["mamba"], rms_norm(x, p["ln1"], eps), cfg)
+            cache = st if collect_cache else None
+        x = x + _post(h)
+        x = x + _post(_ffn(kind, p, rms_norm(x, p["ln2"], eps), cfg, aux))
+    return x, cache
+
+
+def sublayer_decode(
+    kind: str,
+    p: PyTree,
+    x: Array,
+    cfg: ModelConfig,
+    cache: PyTree,
+    pos: Array,
+    aux: dict,
+) -> tuple[Array, PyTree]:
+    eps = cfg.norm_eps
+    if kind == "rwkv":
+        h, st_tm = rwkv_lib.time_mix_decode(p["tm"], rms_norm(x, p["ln1"], eps), cfg, cache["tm"])
+        x = x + h
+        h, st_cm = rwkv_lib.channel_mix_forward(p["cm"], rms_norm(x, p["ln2"], eps), cfg, cache["cm"])
+        x = x + h
+        return x, {"tm": st_tm, "cm": st_cm}
+    if kind == "wdec":
+        h, kv = attn.gqa_decode(
+            p["attn"], layer_norm(x, p["ln1"], p["lb1"], eps), cfg,
+            {"k": cache["k"], "v": cache["v"]}, pos, rope=False,
+        )
+        x = x + h
+        positions = jnp.full((x.shape[0], 1), pos, jnp.int32)
+        x = x + attn.gqa_cross_forward(
+            p["cross"], layer_norm(x, p["ln2"], p["lb2"], eps),
+            cache["ck"], cache["cv"], cfg, positions,
+        )
+        x = x + mlp_gelu(p["mlp"], layer_norm(x, p["ln3"], p["lb3"], eps))
+        return x, {**kv, "ck": cache["ck"], "cv": cache["cv"]}
+    mix = kind.split("_")[0]
+    if mix == "gqa":
+        h, new_cache = attn.gqa_decode(p["attn"], rms_norm(x, p["ln1"], eps), cfg, cache, pos)
+    elif mix == "mla":
+        h, new_cache = attn.mla_decode(p["attn"], rms_norm(x, p["ln1"], eps), cfg, cache, pos)
+    else:
+        h, new_cache = mam.mamba_decode(p["mamba"], rms_norm(x, p["ln1"], eps), cfg, cache)
+    x = x + h
+    x = x + _ffn(kind, p, rms_norm(x, p["ln2"], eps), cfg, aux)
+    return x, new_cache
+
+
+def init_sublayer_cache(
+    kind: str, cfg: ModelConfig, batch: int, max_len: int, dtype
+) -> PyTree:
+    kv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    if kind == "rwkv":
+        return rwkv_lib.init_rwkv_state(cfg, batch, dtype)
+    if kind == "wdec":
+        return {
+            "k": jnp.zeros((batch, max_len, kv, hd), dtype),
+            "v": jnp.zeros((batch, max_len, kv, hd), dtype),
+            "ck": jnp.zeros((batch, cfg.encoder_seq, kv, hd), dtype),
+            "cv": jnp.zeros((batch, cfg.encoder_seq, kv, hd), dtype),
+        }
+    mix = kind.split("_")[0]
+    if mix == "gqa":
+        return {
+            "k": jnp.zeros((batch, max_len, kv, hd), dtype),
+            "v": jnp.zeros((batch, max_len, kv, hd), dtype),
+        }
+    if mix == "mla":
+        m = cfg.mla
+        return {
+            "c_kv": jnp.zeros((batch, max_len, m.kv_lora_rank), dtype),
+            "k_rope": jnp.zeros((batch, max_len, m.rope_head_dim), dtype),
+        }
+    return mam.init_mamba_state(cfg, batch, dtype)
+
+
+# ---------------------------------------------------------------------------
+# Stage execution
+# ---------------------------------------------------------------------------
+
+
+def _remat_policy(cfg: ModelConfig):
+    if cfg.remat == "full":
+        return jax.checkpoint_policies.nothing_saveable
+    if cfg.remat == "dots":
+        return jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    return jax.checkpoint_policies.everything_saveable
+
+
+def init_stage(stage: Stage, key, cfg: ModelConfig, dtype) -> PyTree:
+    def unit_init(k):
+        ks = jax.random.split(k, len(stage.unit))
+        return {f"u{j}": _init_sublayer(kind, ks[j], cfg, dtype)
+                for j, kind in enumerate(stage.unit)}
+
+    if stage.scan:
+        return stack_init(key, stage.n, unit_init)
+    ks = jax.random.split(key, stage.n)
+    return [unit_init(k) for k in ks]
+
+
+def stage_forward(
+    stage: Stage,
+    params: PyTree,
+    x: Array,
+    cfg: ModelConfig,
+    positions: Array,
+    aux: dict,
+    *,
+    collect_cache: bool = False,
+    enc_out: Array | None = None,
+) -> tuple[Array, PyTree | None]:
+    def unit_body(x, unit_params):
+        a = {}
+        caches = {}
+        for j, kind in enumerate(stage.unit):
+            x, c = sublayer_forward(
+                kind, unit_params[f"u{j}"], x, cfg, positions, a,
+                collect_cache=collect_cache, enc_out=enc_out,
+            )
+            if collect_cache:
+                caches[f"u{j}"] = c
+        extras = (jnp.asarray(a.get("router_aux", 0.0), jnp.float32),
+                  jnp.asarray(a.get("router_z", 0.0), jnp.float32))
+        return x, (caches if collect_cache else None, extras)
+
+    body = jax.checkpoint(unit_body, policy=_remat_policy(cfg), static_argnums=()) \
+        if cfg.remat != "none" else unit_body
+
+    if stage.scan:
+        x, (cache, extras) = jax.lax.scan(body, x, params)
+        aux["router_aux"] = aux.get("router_aux", 0.0) + extras[0].sum()
+        aux["router_z"] = aux.get("router_z", 0.0) + extras[1].sum()
+        return x, cache
+    caches = []
+    for up in params:
+        x, (c, extras) = body(x, up)
+        aux["router_aux"] = aux.get("router_aux", 0.0) + extras[0]
+        aux["router_z"] = aux.get("router_z", 0.0) + extras[1]
+        caches.append(c)
+    return x, (caches if collect_cache else None)
+
+
+def stage_decode(
+    stage: Stage,
+    params: PyTree,
+    x: Array,
+    cfg: ModelConfig,
+    cache: PyTree,
+    pos: Array,
+    aux: dict,
+) -> tuple[Array, PyTree]:
+    def unit_body(x, scanned):
+        unit_params, unit_cache = scanned
+        a = {}
+        new_caches = {}
+        for j, kind in enumerate(stage.unit):
+            x, c = sublayer_decode(kind, unit_params[f"u{j}"], x, cfg, unit_cache[f"u{j}"], pos, a)
+            new_caches[f"u{j}"] = c
+        extras = (jnp.asarray(a.get("router_aux", 0.0), jnp.float32),
+                  jnp.asarray(a.get("router_z", 0.0), jnp.float32))
+        return x, (new_caches, extras)
+
+    if stage.scan:
+        x, (new_cache, extras) = jax.lax.scan(unit_body, x, (params, cache))
+        return x, new_cache
+    new_caches = []
+    for up, uc in zip(params, cache):
+        x, (c, _) = unit_body(x, (up, uc))
+        new_caches.append(c)
+    return x, new_caches
+
+
+def init_stage_cache(
+    stage: Stage, cfg: ModelConfig, batch: int, max_len: int, dtype
+) -> PyTree:
+    def unit_cache():
+        return {f"u{j}": init_sublayer_cache(kind, cfg, batch, max_len, dtype)
+                for j, kind in enumerate(stage.unit)}
+
+    if stage.scan:
+        one = unit_cache()
+        return jax.tree.map(lambda a: jnp.broadcast_to(a, (stage.n, *a.shape)).copy(), one)
+    return [unit_cache() for _ in range(stage.n)]

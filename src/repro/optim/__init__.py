@@ -1,0 +1,13 @@
+from repro.optim.optimizer import (
+    Optimizer,
+    adafactor,
+    adamw,
+    clip_by_global_norm,
+    get_optimizer,
+)
+from repro.optim.schedule import cosine_with_warmup
+
+__all__ = [
+    "Optimizer", "adafactor", "adamw", "clip_by_global_norm", "get_optimizer",
+    "cosine_with_warmup",
+]

@@ -1,0 +1,135 @@
+"""Optimizers (pure-pytree, optax-style init/update pairs).
+
+* adamw     — fp32 moments; small/medium models.
+* adafactor — factored second moment (row/col statistics), no first moment:
+              O(d) state instead of O(d^2)-ish, the standard choice for the
+              200B+ configs where full Adam state would not fit 16 GB HBM
+              even fully sharded.
+
+State trees inherit the parameter shardings (ZeRO-style) — see
+train/train_step.py.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+PyTree = Any
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[PyTree], PyTree]
+    update: Callable[[PyTree, PyTree, PyTree, Array], tuple[PyTree, PyTree]]
+    # update(grads, state, params, lr) -> (new_params, new_state)
+
+
+def clip_by_global_norm(grads: PyTree, max_norm: float) -> tuple[PyTree, Array]:
+    leaves = jax.tree.leaves(grads)
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gnorm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), gnorm
+
+
+def adamw(b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {
+            "mu": jax.tree.map(zeros, params),
+            "nu": jax.tree.map(zeros, params),
+            "step": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params, lr):
+        step = state["step"] + 1
+        t = step.astype(jnp.float32)
+        c1 = 1.0 - b1**t
+        c2 = 1.0 - b2**t
+
+        def upd(g, m, v, p):
+            gf = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * gf
+            v = b2 * v + (1 - b2) * gf * gf
+            mh = m / c1
+            vh = v / c2
+            delta = mh / (jnp.sqrt(vh) + eps) + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+        out = jax.tree.map(upd, grads, state["mu"], state["nu"], params)
+        new_p = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_v = jax.tree.map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+        return new_p, {"mu": new_m, "nu": new_v, "step": step}
+
+    return Optimizer(init, update)
+
+
+def adafactor(eps: float = 1e-30, clip_threshold: float = 1.0,
+              decay: float = 0.8, weight_decay: float = 0.0) -> Optimizer:
+    """Factored Adafactor (Shazeer & Stern 2018), no momentum."""
+
+    def _factored(shape) -> bool:
+        return len(shape) >= 2 and shape[-1] > 1 and shape[-2] > 1
+
+    def init(params):
+        def leaf(p):
+            if _factored(p.shape):
+                return {
+                    "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                }
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+        return {
+            "v": jax.tree.map(leaf, params),
+            "step": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params, lr):
+        step = state["step"] + 1
+        t = step.astype(jnp.float32)
+        beta = 1.0 - t ** -decay
+
+        def upd(g, v, p):
+            gf = g.astype(jnp.float32)
+            g2 = gf * gf + eps
+            if _factored(p.shape):
+                vr = beta * v["vr"] + (1 - beta) * g2.mean(axis=-1)
+                vc = beta * v["vc"] + (1 - beta) * g2.mean(axis=-2)
+                rfac = (vr / jnp.maximum(vr.mean(axis=-1, keepdims=True), eps))[..., None]
+                u = gf * jax.lax.rsqrt(jnp.maximum(rfac * vc[..., None, :], eps))
+                nv = {"vr": vr, "vc": vc}
+            else:
+                vv = beta * v["v"] + (1 - beta) * g2
+                u = gf * jax.lax.rsqrt(jnp.maximum(vv, eps))
+                nv = {"v": vv}
+            # update clipping (RMS <= clip_threshold)
+            rms = jnp.sqrt(jnp.mean(u * u) + 1e-30)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            pf = p.astype(jnp.float32)
+            if weight_decay:
+                u = u + weight_decay * pf
+            return (pf - lr * u).astype(p.dtype), nv
+
+        flat, tdef = jax.tree.flatten(params)
+        gflat = tdef.flatten_up_to(grads)
+        vflat = tdef.flatten_up_to(state["v"])
+        outs = [upd(g, v, p) for g, v, p in zip(gflat, vflat, flat)]
+        new_p = tdef.unflatten([o[0] for o in outs])
+        new_v = tdef.unflatten([o[1] for o in outs])
+        return new_p, {"v": new_v, "step": step}
+
+    return Optimizer(init, update)
+
+
+def get_optimizer(name: str) -> Optimizer:
+    if name == "adamw":
+        return adamw()
+    if name == "adafactor":
+        return adafactor()
+    raise ValueError(f"unknown optimizer {name!r}")

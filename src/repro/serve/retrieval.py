@@ -1,0 +1,176 @@
+"""kNN-LM retrieval at the LM head — the paper's technique as a first-class
+serving feature.
+
+The datastore holds (key, next-token) pairs organized by the paper's
+overlap-optimized forest (core/).  At each decode step the hidden state
+queries the datastore; the neighbor distribution is interpolated with the
+model distribution:
+
+    p(y) = lam * p_knn(y) + (1 - lam) * p_lm(y)
+    p_knn(y)  proportional to  sum_{(k_i, v_i) in topK, v_i = y} exp(-d_i / T)
+
+Distributed layout: the datastore is sharded over the 'model' axis inside a
+shard_map island — each shard scans its local rows with the fused Pallas
+distance+top-k kernel, then a k-per-shard all_gather + global top-k merges
+(collective volume: k * (1 + 1) floats per query per shard, NOT the
+datastore).  Alg. 2's "run kNN on the selected indexes in parallel" maps
+exactly onto this island (DESIGN.md §3).
+
+Datastore variants:
+  * flat      — brute-force shard scan (fused kernel), exact;
+  * forest    — the paper's overlap-optimized forest, pruned scan (host
+                builds the forest; device search via core.knn);
+  * quantized — int8 rows (beyond-paper memory-roofline lever, kernels/).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.distributed import context as dctx
+from repro.kernels import ops as kops
+
+Array = jax.Array
+
+
+@jax.tree_util.register_dataclass
+@dataclass
+class Datastore:
+    keys: Array  # (N, Dk) f32 or int8 (quantized)
+    values: Array  # (N,) i32 token ids
+    scale: Array | None = None  # (N,) per-row int8 scales
+    proj: Array | None = None  # (D, Dk) optional query down-projection
+
+
+def build_flat_datastore(
+    keys: np.ndarray, values: np.ndarray, *, quantized: bool = False
+) -> Datastore:
+    k = jnp.asarray(keys, jnp.float32)
+    if quantized:
+        kq, scale = kops.quantize_datastore(k)
+        return Datastore(keys=kq, values=jnp.asarray(values, jnp.int32), scale=scale)
+    return Datastore(keys=k, values=jnp.asarray(values, jnp.int32))
+
+
+@jax.tree_util.register_dataclass
+@dataclass
+class ForestDatastore:
+    """The paper's overlap-optimized forest as a kNN-LM datastore: queries
+    run the pruned masked-bucket scan (core/knn.py) instead of the flat
+    shard scan — the fraction of rows touched is the paper's whole point
+    (benchmarks/bench_retrieval.py measures it)."""
+
+    forest: Any  # core.knn.DeviceForest
+    values: Array  # (N_objects,) i32, indexed by global object id
+
+
+def build_forest_datastore(
+    keys: np.ndarray,
+    values: np.ndarray,
+    *,
+    method: str = "vbm",
+    eps: float | None = None,
+    min_pts: int = 16,
+) -> ForestDatastore:
+    """Build the paper's index over the datastore keys (host-side, like any
+    vector store's build path)."""
+    from repro.core import IndexConfig, build_index
+    from repro.core.knn import device_forest
+
+    if eps is None:
+        # k-dist style heuristic: median NN distance of a sample x 2
+        g = np.random.default_rng(0)
+        sample = keys[g.choice(len(keys), min(2048, len(keys)), replace=False)]
+        d2 = ((sample[:, None, :] - sample[None, :, :]) ** 2).sum(-1)
+        np.fill_diagonal(d2, np.inf)
+        eps = 2.0 * float(np.sqrt(np.median(d2.min(axis=1))))
+    cfg = IndexConfig(method=method, eps=eps, min_pts=min_pts, dbscan_block=2048)
+    forest, _ = build_index(np.asarray(keys, np.float32), cfg)
+    return ForestDatastore(
+        forest=device_forest(forest), values=jnp.asarray(values, jnp.int32)
+    )
+
+
+def forest_knn(
+    hidden: Array, ds: ForestDatastore, k: int
+) -> tuple[Array, Array]:
+    """(distances (B,k), token values (B,k)) via the paper's Alg. 2 search."""
+    from repro.core.knn import knn_search
+
+    d, ids, _ = knn_search(ds.forest, hidden.astype(jnp.float32), k=k, mode="forest")
+    vals = ds.values[jnp.clip(ids, 0, ds.values.shape[0] - 1)]
+    vals = jnp.where(ids >= 0, vals, 0)
+    d = jnp.where(ids >= 0, d, jnp.inf)
+    return d * d, vals  # squared distances, matching the flat path
+
+
+def _local_topk(q: Array, ds: Datastore, k: int) -> tuple[Array, Array]:
+    if ds.scale is not None:
+        d2 = kops.pairwise_sq_l2_int8(q, ds.keys, ds.scale)
+        neg, idx = jax.lax.top_k(-d2, k)
+        return -neg, idx
+    return kops.knn_topk(q, ds.keys, k=k)
+
+
+def knn_logits(
+    hidden: Array, ds: Datastore, cfg: ModelConfig
+) -> Array:
+    """p_knn over the padded vocab from datastore neighbors of ``hidden``.
+
+    hidden: (B, D). Runs the sharded scan when a mesh with a 'model' axis is
+    active, single-shard otherwise.
+    """
+    r = cfg.retrieval
+    if isinstance(ds, ForestDatastore):
+        d2, vals = forest_knn(hidden, ds, r.k)
+        w = jax.nn.softmax(-jnp.sqrt(jnp.maximum(d2, 0.0)) / r.temperature, axis=-1)
+        p_knn = jnp.zeros((hidden.shape[0], cfg.padded_vocab), jnp.float32)
+        return p_knn.at[jnp.arange(hidden.shape[0])[:, None], vals].add(w)
+    q = hidden.astype(jnp.float32)
+    if ds.proj is not None:
+        q = q @ ds.proj.astype(jnp.float32)
+
+    mesh = dctx.current_mesh()
+    tp = dctx.model_axis_size(mesh)
+    if mesh is None or tp == 1:
+        d2, idx = _local_topk(q, ds, r.k)
+        vals = ds.values[idx]  # (B, k)
+    else:
+        def island(q_l, keys, values, scale):
+            ds_l = Datastore(keys=keys, values=values, scale=scale)
+            d2_l, idx_l = _local_topk(q_l, ds_l, r.k)
+            v_l = values[idx_l]
+            # gather k candidates per shard -> (B, tp * k), merge exactly
+            d2_all = jax.lax.all_gather(d2_l, dctx.MODEL_AXIS, axis=1, tiled=True)
+            v_all = jax.lax.all_gather(v_l, dctx.MODEL_AXIS, axis=1, tiled=True)
+            neg, pos = jax.lax.top_k(-d2_all, r.k)
+            return -neg, jnp.take_along_axis(v_all, pos, axis=1)
+
+        scale_spec = P(dctx.MODEL_AXIS) if ds.scale is not None else None
+        d2, vals = jax.shard_map(
+            island,
+            mesh=mesh,
+            in_specs=(P(), P(dctx.MODEL_AXIS, None), P(dctx.MODEL_AXIS), scale_spec),
+            out_specs=(P(), P()),
+            check_vma=False,
+        )(q, ds.keys, ds.values, ds.scale)
+
+    w = jax.nn.softmax(-jnp.sqrt(jnp.maximum(d2, 0.0)) / r.temperature, axis=-1)  # (B, k)
+    vocab = cfg.padded_vocab
+    p_knn = jnp.zeros((hidden.shape[0], vocab), jnp.float32)
+    p_knn = p_knn.at[jnp.arange(hidden.shape[0])[:, None], vals].add(w)
+    return p_knn
+
+
+def knn_interpolate(logits: Array, hidden: Array, ds: Datastore, cfg: ModelConfig) -> Array:
+    """log of lam * p_knn + (1 - lam) * softmax(logits)."""
+    lam = cfg.retrieval.lam
+    p_lm = jax.nn.softmax(logits, axis=-1)
+    p_knn = knn_logits(hidden, ds, cfg)
+    return jnp.log(jnp.maximum((1.0 - lam) * p_lm + lam * p_knn, 1e-20))

@@ -1,0 +1,88 @@
+"""The jitted train step: microbatched grad accumulation, optional gradient
+compression, global-norm clipping, optimizer update.
+
+Distribution is GSPMD-first: the step is written single-program and sharded
+via in/out shardings + the logical-axis constraints inside the model.  Two
+distributed-optimization knobs live here:
+
+* grad accumulation (``cfg.grad_accum``): lax.scan over microbatches —
+  activation memory / ga, identical math;
+* gradient compression (``grad_dtype='bfloat16'``): accumulated gradients
+  are kept (and therefore cross-replica-reduced) in bf16 — halves the
+  data-parallel all-reduce bytes; master params/optimizer stay f32.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.model import Model
+from repro.optim.optimizer import Optimizer, clip_by_global_norm
+
+Array = jax.Array
+PyTree = Any
+
+
+def make_train_step(
+    model: Model,
+    optimizer: Optimizer,
+    lr_schedule,
+    *,
+    grad_dtype: str = "float32",
+    clip_norm: float = 1.0,
+):
+    cfg = model.cfg
+    ga = max(cfg.grad_accum, 1)
+    gdt = {"float32": jnp.float32, "bfloat16": jnp.bfloat16}[grad_dtype]
+
+    def loss_fn(params, micro):
+        loss, metrics = model.loss(params, micro)
+        return loss, metrics
+
+    def train_step(state: dict, batch: dict) -> tuple[dict, dict]:
+        params, opt_state, step = state["params"], state["opt"], state["step"]
+
+        def micro_slice(i, x):
+            b = x.shape[0] // ga
+            return jax.lax.dynamic_slice_in_dim(x, i * b, b, axis=0)
+
+        def accum(carry, i):
+            gsum, lsum = carry
+            micro = jax.tree.map(functools.partial(micro_slice, i), batch)
+            (loss, _), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, micro)
+            grads = jax.tree.map(lambda a: a.astype(gdt), grads)
+            gsum = jax.tree.map(jnp.add, gsum, grads)
+            return (gsum, lsum + loss), None
+
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, gdt), params)
+        if ga > 1:
+            (gsum, lsum), _ = jax.lax.scan(accum, (zeros, 0.0), jnp.arange(ga))
+        else:
+            (gsum, lsum), _ = accum((zeros, 0.0), 0)
+        # stay in grad_dtype through the cross-replica reduction (casting to
+        # f32 here doubles the gradient all-reduce wire bytes — measured
+        # 1.2 TB/step on deepseek-67b zero3; optimizers upcast internally)
+        grads = jax.tree.map(lambda g: g / ga, gsum)
+        loss = lsum / ga
+        grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        lr = lr_schedule(step)
+        new_params, new_opt = optimizer.update(grads, opt_state, params, lr)
+        new_state = {"params": new_params, "opt": new_opt, "step": step + 1}
+        metrics = {"loss": loss, "grad_norm": gnorm, "lr": lr}
+        return new_state, metrics
+
+    return train_step
+
+
+def init_train_state(model: Model, optimizer: Optimizer, rng) -> dict:
+    params = model.init(rng)
+    return {"params": params, "opt": optimizer.init(params), "step": jnp.zeros((), jnp.int32)}
+
+
+def abstract_train_state(model: Model, optimizer: Optimizer) -> PyTree:
+    """eval_shape'd state for the dry-run (no allocation)."""
+    return jax.eval_shape(lambda: init_train_state(model, optimizer, jax.random.key(0)))

@@ -1,0 +1,23 @@
+import os
+
+# Tests must see the single real CPU device (the 512-device fake mesh is
+# strictly dryrun.py's business — see launch/dryrun.py).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(1234)
+
+
+@pytest.fixture(scope="session")
+def blob_data():
+    """Clustered dataset with noise — the shape of the paper's IoT data."""
+    g = np.random.default_rng(7)
+    centers = g.normal(size=(5, 8)) * 10.0
+    parts = [c + g.normal(size=(400, 8)) for c in centers]
+    parts.append(g.uniform(-15, 15, size=(100, 8)))
+    return np.concatenate(parts).astype(np.float32)

@@ -1,0 +1,93 @@
+"""DBSCAN correctness: the parallel label-propagation formulation must match
+a classic sequential reference on core-point clustering."""
+import numpy as np
+import pytest
+
+from repro.core import dbscan, partitions_from_labels
+
+
+def _reference_dbscan(x: np.ndarray, eps: float, min_pts: int):
+    """Textbook DBSCAN (Ester et al. 1996), O(n^2), for oracle use."""
+    n = len(x)
+    d = np.sqrt(((x[:, None, :] - x[None, :, :]) ** 2).sum(-1))
+    neigh = [np.where(d[i] <= eps)[0] for i in range(n)]
+    core = np.array([len(nb) >= min_pts for nb in neigh])
+    labels = np.full(n, -1)
+    cid = 0
+    for i in range(n):
+        if labels[i] != -1 or not core[i]:
+            continue
+        stack = [i]
+        labels[i] = cid
+        while stack:
+            j = stack.pop()
+            if not core[j]:
+                continue
+            for nb in neigh[j]:
+                if labels[nb] == -1:
+                    labels[nb] = cid
+                    stack.append(nb)
+        cid += 1
+    return labels, core, cid
+
+
+def _same_partition(a: np.ndarray, b: np.ndarray) -> bool:
+    """Labelings equal up to renaming."""
+    pa = {}
+    for x_, y_ in zip(a.tolist(), b.tolist()):
+        if x_ in pa and pa[x_] != y_:
+            return False
+        pa[x_] = y_
+    return len(set(pa.values())) == len(pa)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+@pytest.mark.parametrize("block", [64, 1000])
+def test_dbscan_matches_reference(seed, block):
+    g = np.random.default_rng(seed)
+    centers = g.normal(size=(4, 4)) * 8
+    x = np.concatenate(
+        [c + g.normal(size=(120, 4)) for c in centers] + [g.uniform(-12, 12, (40, 4))]
+    ).astype(np.float32)
+    eps, min_pts = 1.2, 6
+    ref_labels, ref_core, ref_k = _reference_dbscan(x, eps, min_pts)
+    res = dbscan(x, eps, min_pts, block=block)
+    assert (res.core_mask == ref_core).all()
+    assert res.n_clusters == ref_k
+    # Core-point clustering is unique: must match exactly up to renaming.
+    c = ref_core
+    assert _same_partition(res.labels[c], ref_labels[c])
+    # Border points: our tie-break is nearest-core; both must agree on
+    # noise-vs-clustered status.
+    assert ((res.labels == -1) == (ref_labels == -1)).all()
+
+
+def test_partitions_cover_everything(blob_data):
+    x = blob_data[:800]
+    res = dbscan(x, 1.5, 8)
+    pivots, radii, assign = partitions_from_labels(x, res.labels, res.n_clusters)
+    n_clusters = max(res.n_clusters, 1)
+    assert pivots.shape == (n_clusters, x.shape[1])
+    assert (assign >= 0).all() and (assign < n_clusters).all()
+    # radius covers every assigned object
+    d = np.sqrt(((x - pivots[assign]) ** 2).sum(-1))
+    assert (d <= radii[assign] + 1e-4).all()
+
+
+def test_dbscan_all_noise():
+    g = np.random.default_rng(3)
+    x = g.uniform(-100, 100, size=(50, 6)).astype(np.float32)
+    res = dbscan(x, 0.01, 5)
+    assert res.n_clusters == 0
+    assert (res.labels == -1).all()
+    pivots, radii, assign = partitions_from_labels(x, res.labels, res.n_clusters)
+    assert pivots.shape[0] == 1  # degenerate single partition
+    assert (assign == 0).all()
+
+
+def test_dbscan_single_cluster():
+    g = np.random.default_rng(4)
+    x = g.normal(size=(200, 3)).astype(np.float32)
+    res = dbscan(x, 3.0, 4)
+    assert res.n_clusters == 1
+    assert (res.labels == 0).all()

@@ -1,0 +1,139 @@
+"""Per-architecture smoke tests (reduced same-family configs): forward +
+train-step shapes, finiteness, cache consistency (prefill + decode ==
+teacher-forced forward), and gradient flow."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, get_smoke_config
+from repro.models import Model, num_params
+
+
+def _batch(cfg, b, s, rng):
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (b, s)), jnp.int32)}
+    batch["targets"] = jnp.asarray(rng.integers(0, cfg.vocab_size, (b, s)), jnp.int32)
+    if cfg.family == "encdec":
+        batch["frames"] = jnp.asarray(
+            rng.normal(size=(b, cfg.encoder_seq, cfg.d_model)) * 0.1, jnp.float32)
+    if cfg.frontend == "vision_stub":
+        batch["patches"] = jnp.asarray(
+            rng.normal(size=(b, cfg.num_stub_patches, cfg.d_model)) * 0.1, jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_forward_shapes_and_finite(arch, rng):
+    cfg = get_smoke_config(arch)
+    m = Model(cfg)
+    params = m.init(jax.random.key(0))
+    batch = _batch(cfg, 2, 16, rng)
+    logits, aux, _ = m.forward(params, batch)
+    assert logits.shape == (2, 16, cfg.padded_vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    assert num_params(params) > 0
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_train_step_grads(arch, rng):
+    """One loss+grad step: finite loss, finite nonzero grads."""
+    cfg = get_smoke_config(arch)
+    m = Model(cfg)
+    params = m.init(jax.random.key(1))
+    batch = _batch(cfg, 2, 8, rng)
+    (loss, metrics), grads = jax.value_and_grad(m.loss, has_aux=True)(params, batch)
+    assert bool(jnp.isfinite(loss))
+    gnorm = sum(float(jnp.sum(jnp.abs(g))) for g in jax.tree.leaves(grads))
+    assert np.isfinite(gnorm) and gnorm > 0.0
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_prefill_decode_matches_forward(arch, rng):
+    """KV-cache / state correctness: step-by-step decode must reproduce the
+    teacher-forced logits.  MLA runs its absorbed decode path in f32 here
+    (the bf16 delta between decompressed and absorbed orderings is
+    reassociation noise, verified ~1e-6 in f32)."""
+    cfg = get_smoke_config(arch).replace(compute_dtype="float32")
+    m = Model(cfg)
+    params = m.init(jax.random.key(2))
+    b, s, t = 2, 6, 10
+    batch = _batch(cfg, b, t, rng)
+    full_logits, _, _ = m.forward(params, batch)
+    pre = dict(batch)
+    pre["tokens"] = batch["tokens"][:, :s]
+    lg_pre, cache = m.prefill(params, pre, max_len=t)
+    np.testing.assert_allclose(
+        np.asarray(lg_pre[:, -1]), np.asarray(full_logits[:, s - 1]), atol=2e-3, rtol=1e-3)
+    for pos in range(s, t):
+        lg, cache = m.decode_step(
+            params, batch["tokens"][:, pos : pos + 1], cache, jnp.int32(pos))
+        np.testing.assert_allclose(
+            np.asarray(lg), np.asarray(full_logits[:, pos]), atol=2e-3, rtol=1e-3)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_full_config_matches_assignment(arch):
+    """The full (non-smoke) configs carry the published hyperparameters."""
+    cfg = get_config(arch)
+    expect = {
+        "whisper-tiny": (4, 384, 6, 6, 1536, 51865),
+        "pixtral-12b": (40, 5120, 32, 8, 14336, 131072),
+        "jamba-1.5-large-398b": (72, 8192, 64, 8, 24576, 65536),
+        "smollm-135m": (30, 576, 9, 3, 1536, 49152),
+        "granite-20b": (52, 6144, 48, 1, 24576, 49152),
+        "qwen2-0.5b": (24, 896, 14, 2, 4864, 151936),
+        "deepseek-67b": (95, 8192, 64, 8, 22016, 102400),
+        "rwkv6-3b": (32, 2560, 40, 40, 8960, 65536),
+        "deepseek-v2-236b": (60, 5120, 128, 128, 12288, 102400),
+        "qwen3-moe-235b-a22b": (94, 4096, 64, 4, 1536, 151936),
+    }[arch]
+    got = (cfg.num_layers, cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+           cfg.d_ff, cfg.vocab_size)
+    assert got == expect
+    if arch == "jamba-1.5-large-398b":
+        assert cfg.moe.num_experts == 16 and cfg.moe.top_k == 2
+    if arch == "deepseek-v2-236b":
+        assert cfg.moe.num_experts == 160 and cfg.moe.top_k == 6
+        assert cfg.mla.kv_lora_rank == 512
+    if arch == "qwen3-moe-235b-a22b":
+        assert cfg.moe.num_experts == 128 and cfg.moe.top_k == 8
+
+
+def test_moe_capacity_drop_counts(rng):
+    """Capacity factor controls dropping; generous capacity == dense math
+    (validated against a per-expert dense oracle)."""
+    from repro.configs.base import ModelConfig, MoEConfig
+    from repro.models import moe as moe_lib
+
+    cfg = ModelConfig(
+        name="t", family="moe", num_layers=1, d_model=16, num_heads=2,
+        num_kv_heads=2, d_ff=32, vocab_size=64,
+        moe=MoEConfig(num_experts=4, top_k=2, d_ff_expert=16, capacity_factor=2.0),
+    )
+    p = moe_lib.init_moe(jax.random.key(0), cfg, jnp.float32)
+    x = jnp.asarray(rng.normal(size=(2, 16, 16)), jnp.float32)
+    out, _ = moe_lib.moe_ffn(p, x, cfg)
+    x2d = x.reshape(-1, 16)
+    logits = x2d @ p["router"]
+    probs = jax.nn.softmax(logits, -1)
+    tp_, te_ = jax.lax.top_k(probs, 2)
+    tp_ = tp_ / tp_.sum(-1, keepdims=True)
+    ref = jnp.zeros_like(x2d)
+    for e in range(4):
+        h = jax.nn.silu(x2d @ p["w_gate"][e]) * (x2d @ p["w_in"][e])
+        y = h @ p["w_out"][e]
+        ref += y * ((te_ == e) * tp_).sum(-1)[:, None]
+    np.testing.assert_allclose(
+        np.asarray(out.reshape(-1, 16)), np.asarray(ref), atol=1e-4, rtol=1e-4)
+
+
+def test_rwkv_long_context_state_is_constant_memory(rng):
+    """SSM family: decode state size is independent of context length."""
+    from repro.models.rwkv import init_rwkv_state
+
+    cfg = get_smoke_config("rwkv6-3b")
+    s1 = init_rwkv_state(cfg, 2, jnp.float32)
+    total = sum(x.size for x in jax.tree.leaves(s1))
+    # no dependence on any sequence length parameter at all
+    assert total == 2 * (cfg.d_model + cfg.d_model // cfg.rwkv.head_dim
+                         * cfg.rwkv.head_dim**2 + cfg.d_model)

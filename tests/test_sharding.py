@@ -1,0 +1,106 @@
+"""Sharding-rule tests: param/cache spec resolution, divisibility fallback,
+duplicate-axis guard, local-byte accounting, MoE shard_map island (on a
+small host mesh)."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed import context as dctx
+from repro.distributed import sharding as shd
+from repro.distributed.estimator import _local_bytes
+
+
+@pytest.fixture(scope="module")
+def mesh22():
+    if len(jax.devices()) < 1:
+        pytest.skip("no devices")
+    # single CPU device: mesh (1,1) still exercises the rule resolution
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def test_param_rules_basic(mesh22):
+    m = mesh22
+    assert shd.spec_for_param("embed", (1024, 64), m) == P(None, None)  # 1-size axes
+    # with axis sizes 1 everything degrades to replication; rule paths are
+    # exercised against a fake big mesh below via _raw_spec
+    assert shd._raw_spec("stages/0/u0/attn/wq", 4) == ["none", "fsdp", "heads", "none"]
+    assert shd._raw_spec("stages/1/u0/moe/w_in", 4) == ["none", "expert", "fsdp", "none"]
+    assert shd._raw_spec("opt/mu/stages/0/u0/mlp/w_out", 3) == ["none", "mlp", "fsdp"]
+    # adafactor factored stats inherit parent minus reduced dim
+    assert shd._raw_spec("v/stages/0/u0/mlp/w_in/vr", 2) == ["none", "fsdp"]
+    assert shd._raw_spec("v/stages/0/u0/mlp/w_in/vc", 2) == ["none", "mlp"]
+    assert shd._raw_spec("v/stages/0/u0/moe/w_out/vr", 3) == ["none", "expert", "none"]
+
+
+def test_cache_rules():
+    assert [r for r in shd._CACHE_RULES if r[0] == r"/(k|v)$"][0][1] == (
+        "batch", "seq_kv", "none", "none")
+
+
+def test_divisibility_fallback(mesh22):
+    """Dims that don't divide the axis product degrade to replication."""
+    import math
+
+    class FakeMesh:
+        axis_names = ("data", "model")
+        shape = {"data": 16, "model": 16}
+
+    m = FakeMesh()
+    # 9 heads on 16-way tensor axis -> None
+    spec = shd.spec_for_param("stages/0/u0/attn/wq", (30, 576, 9, 64), m)
+    assert spec == P(None, ("data",), None, None) or spec == P(None, "data", None, None)
+    # 64 heads divide -> sharded
+    spec = shd.spec_for_param("stages/0/u0/attn/wq", (30, 8192, 64, 128), m)
+    assert spec[2] in ("model", ("model",))
+
+
+def test_logical_constraint_dedupes_axes(mesh22):
+    with dctx.use_mesh(mesh22):
+        x = jnp.zeros((4, 8, 16))
+        # seq and vocab both map to 'model' — must not raise
+        shd.set_rule("seq", ("model",))
+        try:
+            out = shd.logical_constraint(x, ("batch", "seq", "vocab"))
+            assert out.shape == x.shape
+        finally:
+            shd.set_rule("seq", ())
+
+
+def test_local_bytes_accounting():
+    class FakeMesh:
+        axis_names = ("data", "model")
+        shape = {"data": 4, "model": 2}
+
+    from jax.sharding import NamedSharding
+
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    tree = {"a": jax.ShapeDtypeStruct((8, 16), jnp.float32)}
+    shardings = {"a": jax.NamedSharding(mesh, P("data", "model"))}
+    # mesh of size 1x1: no reduction
+    assert _local_bytes(tree, shardings) == 8 * 16 * 4
+
+
+def test_moe_island_on_host_mesh(rng):
+    """MoE under a real (1, n) mesh: shard_map path must agree with the
+    single-device dense path."""
+    from repro.configs.base import ModelConfig, MoEConfig
+    from repro.models import moe as moe_lib
+
+    n = len(jax.devices())
+    mesh = jax.make_mesh((1, n), ("data", "model"))
+    cfg = ModelConfig(
+        name="t", family="moe", num_layers=1, d_model=16, num_heads=2,
+        num_kv_heads=2, d_ff=32, vocab_size=64,
+        moe=MoEConfig(num_experts=4 * n, top_k=2, d_ff_expert=16,
+                      capacity_factor=float(2 * n)),
+    )
+    p = moe_lib.init_moe(jax.random.key(0), cfg, jnp.float32)
+    x = jnp.asarray(rng.normal(size=(2, 8, 16)), jnp.float32)
+    ref, _ = moe_lib.moe_ffn(p, x, cfg)  # no mesh -> dense path
+    with dctx.use_mesh(mesh):
+        got, _ = moe_lib.moe_ffn(p, x, cfg)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), atol=1e-4, rtol=1e-4)
