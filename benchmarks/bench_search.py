@@ -21,16 +21,28 @@ def _queries(x: np.ndarray, n: int, seed: int = 7) -> np.ndarray:
     return (x[idx] + 0.05 * x.std() * g.normal(size=(n, x.shape[1]))).astype(np.float32)
 
 
-def _run_one(forest, q, k, mode):
+def _run_one(forest, q, k, mode, kernel=True, quantize=False):
     # warm compile
-    knn_search_host(forest, q[:2], k=k, mode=mode)
+    knn_search_host(forest, q[:2], k=k, mode=mode, kernel=kernel, quantize=quantize)
     t0 = time.perf_counter()
-    d, ids, stats = knn_search_host(forest, q, k=k, mode=mode)
+    d, ids, stats = knn_search_host(
+        forest, q, k=k, mode=mode, kernel=kernel, quantize=quantize
+    )
     dt = time.perf_counter() - t0
     return d, ids, stats, dt
 
 
-def run(full: bool = False, out: dict | None = None) -> None:
+def run(
+    full: bool = False,
+    out: dict | None = None,
+    *,
+    kernel: bool = True,
+    quantize: bool = False,
+) -> None:
+    """``kernel`` routes all search distances through the kernels/ops
+    dispatch layer (fused Pallas bucket scan on TPU); ``quantize`` stores
+    bucket members int8 on device.  Recall is reported either way, so the
+    kernelized path's exactness (mode='all' vs brute force) is visible."""
     for ds in load_datasets(full):
         q = _queries(ds.x, N_QUERIES)
         de, ie = knn_exact(jnp.asarray(ds.x), jnp.asarray(q), k=max(K_VALUES))
@@ -42,7 +54,7 @@ def run(full: bool = False, out: dict | None = None) -> None:
         for method, forest in forests.items():
             mode = "all" if method == "bccf" else "forest"
             for k in K_VALUES:
-                d, ids, stats, dt = _run_one(forest, q, k, mode)
+                d, ids, stats, dt = _run_one(forest, q, k, mode, kernel, quantize)
                 recall = float(np.mean([
                     len(set(ids[i].tolist()) & set(ie[i, :k].tolist())) / k
                     for i in range(len(q))
@@ -66,4 +78,13 @@ def run(full: bool = False, out: dict | None = None) -> None:
 
 
 if __name__ == "__main__":
-    run()
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--no-kernel", action="store_true",
+                    help="bypass kernels/ops dispatch (pure-jnp reference path)")
+    ap.add_argument("--quantize", action="store_true",
+                    help="int8 bucket member storage (device_forest knob)")
+    a = ap.parse_args()
+    run(full=a.full, kernel=not a.no_kernel, quantize=a.quantize)

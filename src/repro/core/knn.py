@@ -45,7 +45,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.forest import ForestArrays
-from repro.core.metric import _pairwise_sq_l2_jnp
+from repro.core.metric import pairwise
+from repro.kernels import ops as kops
+from repro.kernels import ref as kref
 
 Array = jax.Array
 
@@ -54,12 +56,13 @@ class DeviceForest(NamedTuple):
     index_centers: Array  # (I, D)
     index_radii: Array  # (I,)
     neighbors: Array  # (I, MAXNBR) i32, -1 pad
-    bucket_x: Array  # (NB, C, D)
+    bucket_x: Array  # (NB, C, D) f32, or int8 when quantized
     bucket_ids: Array  # (NB, C) i32, -1 pad
     bucket_mask: Array  # (NB, C) bool
-    bucket_pivot: Array  # (NB, D)
+    bucket_pivot: Array  # (NB, D) f32 (bounds stay full precision)
     bucket_radius: Array  # (NB,)
     bucket_index: Array  # (NB,) i32
+    bucket_scale: Array | None = None  # (NB, C) f32 dequant scales (int8 mode)
 
 
 class SearchStats(NamedTuple):
@@ -71,21 +74,32 @@ class SearchStats(NamedTuple):
     steps: Array  # () i32  while-loop trip count
 
 
-def device_forest(f: ForestArrays) -> DeviceForest:
+def device_forest(f: ForestArrays, *, quantize: bool = False) -> DeviceForest:
+    """Upload the flattened forest; ``quantize=True`` stores bucket members
+    int8 with per-member scales (kernels/ops.quantize_datastore layout) —
+    4x less HBM traffic on the member scan; bounds/pivots stay f32."""
+    bucket_x = jnp.asarray(f.bucket_x)
+    bucket_scale = None
+    if quantize:
+        nb, cap, dim = bucket_x.shape
+        xq, scale = kops.quantize_datastore(bucket_x.reshape(nb * cap, dim))
+        bucket_x = xq.reshape(nb, cap, dim)
+        bucket_scale = scale.reshape(nb, cap)
     return DeviceForest(
         index_centers=jnp.asarray(f.index_centers),
         index_radii=jnp.asarray(f.index_radii),
         neighbors=jnp.asarray(f.neighbors),
-        bucket_x=jnp.asarray(f.bucket_x),
+        bucket_x=bucket_x,
         bucket_ids=jnp.asarray(f.bucket_ids),
         bucket_mask=jnp.asarray(f.bucket_mask),
         bucket_pivot=jnp.asarray(f.bucket_pivot),
         bucket_radius=jnp.asarray(f.bucket_radius),
         bucket_index=jnp.asarray(f.bucket_index),
+        bucket_scale=bucket_scale,
     )
 
 
-@functools.partial(jax.jit, static_argnames=("k", "mode", "beam"))
+@functools.partial(jax.jit, static_argnames=("k", "mode", "beam", "kernel"))
 def knn_search(
     forest: DeviceForest,
     q: Array,
@@ -93,11 +107,18 @@ def knn_search(
     k: int,
     mode: str = "forest",
     beam: int = 1,
+    kernel: bool = True,
 ) -> tuple[Array, Array, SearchStats]:
     """Batched kNN over the forest. Returns (dists (Q,k), ids (Q,k), stats).
 
     dists are true L2 distances; ids are global object ids (-1 if fewer than
     k objects were reachable).
+
+    ``kernel=True`` (default) routes every distance — STEP 1 routing, STEP 2a
+    bucket bounds, and the STEP 2b fused gather+distance+top-k bucket scan —
+    through the ``repro.kernels.ops`` dispatch layer (compiled Pallas on TPU,
+    interpret under REPRO_FORCE_PALLAS=1, jnp reference elsewhere).
+    ``kernel=False`` forces the pure-jnp reference path end to end.
     """
     qn = q.shape[0]
     n_idx = forest.index_centers.shape[0]
@@ -106,7 +127,7 @@ def knn_search(
 
     # ---- STEP 1: routing ---------------------------------------------------
     if mode == "forest":
-        d_idx = _pairwise_sq_l2_jnp(q, forest.index_centers)  # (Q, I)
+        d_idx = pairwise(q, forest.index_centers, metric="sq_l2", use_kernel=kernel)  # (Q, I)
         closest = jnp.argmin(d_idx, axis=1)  # (Q,)
         sel = jax.nn.one_hot(closest, n_idx, dtype=jnp.float32)
         nbrs = forest.neighbors[closest]  # (Q, MAXNBR)
@@ -127,9 +148,13 @@ def knn_search(
         raise ValueError(f"mode {mode!r}")
 
     elig = sel[:, forest.bucket_index]  # (Q, NB) -> sel[q, owner(b)]
+    # Bounds are only *used* for eligible buckets (ineligible ones are masked
+    # to +inf below), so the paper's Fig. 21 cost metric charges exactly the
+    # eligible count per query — not all NB rows of the distance matrix.
+    n_elig = jnp.sum(elig, axis=1, dtype=jnp.int32)  # (Q,)
 
     # ---- STEP 2a: lower bounds + visit order --------------------------------
-    d_piv = jnp.sqrt(_pairwise_sq_l2_jnp(q, forest.bucket_pivot))  # (Q, NB)
+    d_piv = pairwise(q, forest.bucket_pivot, metric="l2", use_kernel=kernel)  # (Q, NB)
     lb = jnp.maximum(d_piv - forest.bucket_radius[None, :], 0.0)
     lb = jnp.where(elig, lb, jnp.inf)
     order = jnp.argsort(lb, axis=1)  # (Q, NB) ascending
@@ -167,35 +192,36 @@ def knn_search(
     def cond(c: Carry) -> Array:
         return (c.t < n_steps) & jnp.any(active_mask(c))
 
+    # real (unpadded) member count per bucket, for the cost instrumentation
+    bucket_count = jnp.sum(forest.bucket_mask, axis=1, dtype=jnp.int32)  # (NB,)
+    if kernel:
+        # tile-align the datastore-sized operands ONCE, outside the loop —
+        # the kernel wrapper's defensive per-call pads become no-ops
+        scan_x, scan_ids, scan_scale = kops.bucket_scan_prepad(
+            forest.bucket_x, forest.bucket_ids, forest.bucket_scale
+        )
+        scan_step = kops.bucket_scan_topk
+    else:
+        scan_x, scan_ids, scan_scale = (
+            forest.bucket_x, forest.bucket_ids, forest.bucket_scale,
+        )
+        scan_step = kref.bucket_scan_topk_ref
+
     def body(c: Carry) -> Carry:
         act = active_mask(c)  # (Q, beam)
         bsel = jax.lax.dynamic_slice_in_dim(order, c.t * beam, beam, axis=1)  # (Q, beam)
-        bx = forest.bucket_x[bsel]  # (Q, beam, C, D)
-        bmask = forest.bucket_mask[bsel]  # (Q, beam, C)
-        bids = forest.bucket_ids[bsel]  # (Q, beam, C)
-        # squared distances query -> bucket members
-        diff_dots = jnp.einsum("qbcd,qd->qbc", bx, q)
-        d2 = (
-            jnp.sum(q * q, axis=-1)[:, None, None]
-            + jnp.sum(bx * bx, axis=-1)
-            - 2.0 * diff_dots
+        # fused gather -> squared-L2 -> running top-k merge (one kernel step;
+        # the (Q, beam, C, D) gather never materializes on the kernel path)
+        new_d, new_i = scan_step(
+            q, scan_x, scan_ids, bsel, act, c.top_d, c.top_i, scan_scale
         )
-        d2 = jnp.maximum(d2, 0.0)
-        live = bmask & act[:, :, None]
-        d2 = jnp.where(live, d2, jnp.inf)
-        cand_d = d2.reshape(qn, -1)
-        cand_i = jnp.where(live, bids, -1).reshape(qn, -1)
-        merged_d = jnp.concatenate([c.top_d, cand_d], axis=1)
-        merged_i = jnp.concatenate([c.top_i, cand_i], axis=1)
-        neg_top, pos = jax.lax.top_k(-merged_d, kk)
-        new_d = -neg_top
-        new_i = jnp.take_along_axis(merged_i, pos, axis=1)
+        n_members = jnp.where(act, bucket_count[bsel], 0)  # (Q, beam)
         return Carry(
             top_d=new_d,
             top_i=new_i,
             t=c.t + 1,
             visits=c.visits + jnp.sum(act, axis=1, dtype=jnp.int32),
-            ndist=c.ndist + jnp.sum(live, axis=(1, 2), dtype=jnp.int32),
+            ndist=c.ndist + jnp.sum(n_members, axis=1, dtype=jnp.int32),
             npad=c.npad + jnp.sum(act, axis=1, dtype=jnp.int32) * cap,
         )
 
@@ -204,30 +230,43 @@ def knn_search(
     stats = SearchStats(
         buckets_visited=out.visits,
         distances=out.ndist,
-        bound_distances=route_dists + jnp.int32(nb),
+        bound_distances=route_dists + n_elig,
         padded_distances=out.npad,
         comparisons=route_cmps
-        + jnp.int32(nb)  # bound comparisons
+        + n_elig  # bound comparisons (only eligible buckets are bounded)
         + out.visits * jnp.int32(int(np.ceil(np.log2(max(kk, 2)))) * cap),
         steps=out.t,
     )
     return jnp.sqrt(out.top_d), out.top_i, stats
 
 
-@functools.partial(jax.jit, static_argnames=("k",))
-def knn_exact(x: Array, q: Array, *, k: int) -> tuple[Array, Array]:
+@functools.partial(jax.jit, static_argnames=("k", "kernel"))
+def knn_exact(x: Array, q: Array, *, k: int, kernel: bool = True) -> tuple[Array, Array]:
     """Brute-force oracle: exact kNN of q (Q, D) in x (N, D)."""
-    d2 = _pairwise_sq_l2_jnp(q, x)
+    d2 = pairwise(q, x, metric="sq_l2", use_kernel=kernel)
     neg, idx = jax.lax.top_k(-d2, min(k, x.shape[0]))
     return jnp.sqrt(jnp.maximum(-neg, 0.0)), idx
 
 
 def knn_search_host(
-    forest: ForestArrays, q, *, k: int, mode: str = "forest", beam: int = 1
+    forest: ForestArrays,
+    q,
+    *,
+    k: int,
+    mode: str = "forest",
+    beam: int = 1,
+    kernel: bool = True,
+    quantize: bool = False,
 ):
-    """Convenience host wrapper returning numpy results + python-int stats."""
-    df = device_forest(forest)
-    d, i, s = knn_search(df, jnp.asarray(q, jnp.float32), k=k, mode=mode, beam=beam)
+    """Convenience host wrapper returning numpy results + python-int stats.
+
+    ``kernel`` selects the kernels/ops dispatch path (see knn_search);
+    ``quantize`` stores bucket members int8 on device (device_forest).
+    """
+    df = device_forest(forest, quantize=quantize)
+    d, i, s = knn_search(
+        df, jnp.asarray(q, jnp.float32), k=k, mode=mode, beam=beam, kernel=kernel
+    )
     # Def. 4: |X| <= k  =>  answer set is the whole dataset.
     n_real = int(forest.bucket_mask.sum())
     if d.shape[1] > min(k, n_real):

@@ -72,12 +72,15 @@ def cap_log_volume(n_dim: int | Array, r: Array, cos_theta: Array) -> Array:
     sin2 = jnp.clip(1.0 - cos_theta**2, 0.0, 1.0)
     # I_{sin^2 theta}((n+1)/2, 1/2) in [0, 1]
     reg = betainc(0.5 * (n + 1.0), 0.5, sin2)
-    log_half_ball = ball_log_volume(n_dim, r) + jnp.log(0.5)
-    log_small = log_half_ball + jnp.log(jnp.maximum(reg, _EPS))
-    # theta > pi/2  =>  V_cap = V_ball - V_cap(pi - theta)
     log_ball = ball_log_volume(n_dim, r)
-    big = jnp.exp(log_ball) - jnp.exp(log_small)
-    log_big = jnp.log(jnp.maximum(big, _EPS)) + 0.0
+    log_half_ball = log_ball + jnp.log(0.5)
+    log_small = log_half_ball + jnp.log(jnp.maximum(reg, _EPS))
+    # theta > pi/2  =>  V_cap = V_ball - V_cap(pi - theta).  Stay in log
+    # space: exponentiating the raw volumes overflows f32 for n >~ 20 dims
+    # (exactly what this module promises to avoid); the *ratio*
+    # exp(log_small - log_ball) = reg/2 <= 1/2 is always representable.
+    ratio = jnp.exp(jnp.minimum(log_small - log_ball, 0.0))
+    log_big = log_ball + jnp.log1p(-jnp.minimum(ratio, 1.0 - _EPS))
     return jnp.where(cos_theta >= 0.0, log_small, log_big)
 
 

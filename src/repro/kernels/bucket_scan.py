@@ -1,0 +1,215 @@
+"""Fused bucket gather + squared-L2 + running top-k merge Pallas kernel.
+
+The forest search hot loop (core/knn.py STEP 2b) evaluates, per while-loop
+step, the next ``beam`` buckets of every query: gather the selected bucket
+members, compute query->member distances, and merge them into the running
+per-query top-k.  The jnp formulation materializes a ``(Q, beam, C, D)``
+gather plus a ``(Q, kk + beam*C)`` merge buffer through HBM on *every* step
+— at production bucket capacities that is the entire search cost.
+
+This kernel fuses the three stages in VMEM:
+
+* the bucket ids selected for this step (``bsel``, (Q, beam)) and the
+  per-(query, bucket) active mask (``act``) ride in as **scalar-prefetch**
+  operands, so the grid's DMA engine gathers exactly the ``(C, D)`` bucket
+  tiles the step needs straight from the flattened ``bucket_x`` in HBM —
+  the (Q, beam, C, D) intermediate never exists;
+* distances are one MXU ``(1, D) x (C, D)^T`` contraction per
+  (query, bucket) program;
+* the running ``(1, kk)`` top-k (values + global object ids) stays resident
+  in the output VMEM block across the sequential ``beam`` axis, maintained
+  with the same k-step min-extraction as kernels/topk.py.
+
+Grid: ``(Q, beam)`` with beam innermost (sequential accumulation into the
+same output block, exactly the revisiting pattern of topk.py's N axis).
+
+An int8 variant dequantizes the gathered bucket tile in-register against
+per-member scales (``ops.quantize_datastore`` layout), quartering the HBM
+traffic of the member gather — the memory-roofline lever for serving.
+
+Validated against ``ref.bucket_scan_topk_ref`` in tests/test_bucket_scan.py
+(interpret mode on CPU, compiled on real TPU).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
+
+
+def _scan_kernel(
+    bsel_ref,  # scalar prefetch (Q, beam) i32
+    act_ref,  # scalar prefetch (Q, beam) i32
+    q_ref,  # (1, Dp)
+    x_ref,  # (1, Cp, Dp) gathered bucket tile (f32 or int8)
+    ids_ref,  # (1, Cp) i32, -1 pad
+    scale_ref,  # (1, Cp) f32 per-member dequant scales (ones when f32)
+    top_d_ref,  # (1, kkp) incoming running top-k values
+    top_i_ref,  # (1, kkp) incoming running top-k ids
+    o_val_ref,  # (1, kkp) out
+    o_idx_ref,  # (1, kkp) out
+    *,
+    kk: int,
+):
+    qi = pl.program_id(0)
+    b = pl.program_id(1)
+
+    @pl.when(b == 0)
+    def _init():
+        o_val_ref[...] = top_d_ref[...]
+        o_idx_ref[...] = top_i_ref[...]
+
+    qv = q_ref[...].astype(jnp.float32)  # (1, Dp)
+    x = x_ref[0].astype(jnp.float32) * scale_ref[...].astype(jnp.float32).T  # (Cp, Dp)
+    ids = ids_ref[...]  # (1, Cp)
+    qq = jnp.sum(qv * qv, axis=1)  # (1,)
+    xx = jnp.sum(x * x, axis=1)  # (Cp,)
+    cross = jax.lax.dot_general(
+        qv, x, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (1, Cp)
+    d2 = jnp.maximum(qq[:, None] + xx[None, :] - 2.0 * cross, 0.0)  # (1, Cp)
+    live = (ids >= 0) & (act_ref[qi, b] > 0)
+    d2 = jnp.where(live, d2, jnp.inf)
+    cand_i = jnp.where(live, ids, -1)
+
+    vals = jnp.concatenate([o_val_ref[...], d2], axis=1)  # (1, kkp + Cp)
+    idxs = jnp.concatenate([o_idx_ref[...], cand_i], axis=1)
+    kkp = o_val_ref.shape[1]
+    new_vals = []
+    new_idxs = []
+    for _ in range(kk):
+        m = jnp.min(vals, axis=1)
+        a = jnp.argmin(vals, axis=1)
+        new_vals.append(m)
+        # An inf extraction means the pool ran dry: argmin then points at an
+        # arbitrary (already-extracted) slot whose id must not be re-emitted.
+        # Distances are inf only for masked/padded candidates (id -1), so
+        # inf => -1 matches the oracle's contract.
+        picked = jnp.take_along_axis(idxs, a[:, None], axis=1)[:, 0]
+        new_idxs.append(jnp.where(jnp.isinf(m), -1, picked))
+        vals = jnp.where(
+            jax.lax.broadcasted_iota(jnp.int32, vals.shape, 1) == a[:, None],
+            jnp.inf,
+            vals,
+        )
+    for _ in range(kkp - kk):  # alignment tail stays empty
+        new_vals.append(jnp.full((1,), jnp.inf, jnp.float32))
+        new_idxs.append(jnp.full((1,), -1, jnp.int32))
+    o_val_ref[...] = jnp.stack(new_vals, axis=1)
+    o_idx_ref[...] = jnp.stack(new_idxs, axis=1)
+
+
+def _pad_to(a: Array, axis: int, mult: int, value=0) -> Array:
+    pad = (-a.shape[axis]) % mult
+    if pad == 0:
+        return a
+    widths = [(0, 0)] * a.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(a, widths, constant_values=value)
+
+
+def _pad_multiples(interpret: bool) -> tuple[int, int]:
+    """(lane, C-axis) padding multiples for the kernel's blocks.
+
+    C is the sublane axis of the (1, C, D) member blocks AND the lane axis
+    of the (1, C) id/scale blocks, so compiled mode gives it the full lane
+    multiple (which also satisfies the int8 sublane-32 requirement).  The
+    interpreter has no tiling constraints; small multiples keep the CPU
+    test sweeps exercising the padding paths the compiled kernel relies on.
+    """
+    return (8, 2) if interpret else (128, 128)
+
+
+def prepad_buckets(
+    bucket_x: Array,
+    bucket_ids: Array,
+    scale: Array | None = None,
+    *,
+    interpret: bool = False,
+) -> tuple[Array, Array, Array | None]:
+    """Pad the per-datastore operands to the kernel's tile multiples ONCE.
+
+    ``bucket_scan_topk_pallas`` pads defensively on every call; done inside
+    a search while-loop that would copy the whole datastore each step, so
+    callers that loop (core/knn.py) pre-pad at upload time and the per-step
+    pads become no-ops.
+    """
+    lane, cmult = _pad_multiples(interpret)
+    xp = _pad_to(_pad_to(bucket_x, 2, lane), 1, cmult)
+    idsp = _pad_to(bucket_ids, 1, cmult, value=-1)
+    scalep = None if scale is None else _pad_to(scale.astype(jnp.float32), 1, cmult)
+    return xp, idsp, scalep
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def bucket_scan_topk_pallas(
+    q: Array,  # (Q, D) f32
+    bucket_x: Array,  # (NB, C, D) f32 or int8
+    bucket_ids: Array,  # (NB, C) i32, -1 pad
+    bsel: Array,  # (Q, beam) i32 bucket selection for this step
+    act: Array,  # (Q, beam) bool/int — bucket still inside the bound
+    top_d: Array,  # (Q, kk) running top-k squared distances (ascending)
+    top_i: Array,  # (Q, kk) running top-k object ids
+    scale: Array | None = None,  # (NB, C) f32 when bucket_x is int8
+    *,
+    interpret: bool = False,
+) -> tuple[Array, Array]:
+    """One fused scan step; returns the merged (top_d, top_i), both (Q, kk)."""
+    qn, _ = q.shape
+    nb, cap, _ = bucket_x.shape
+    beam = bsel.shape[1]
+    kk = top_d.shape[1]
+
+    lane, cmult = _pad_multiples(interpret)
+    qp = _pad_to(q.astype(jnp.float32), 1, lane)
+    xp = _pad_to(_pad_to(bucket_x, 2, lane), 1, cmult)
+    idsp = _pad_to(bucket_ids, 1, cmult, value=-1)
+    if scale is None:
+        scalep = jnp.ones(idsp.shape, jnp.float32)
+    else:
+        scalep = _pad_to(scale.astype(jnp.float32), 1, cmult)
+    kkp = kk + (-kk) % lane
+    top_dp = _pad_to(top_d.astype(jnp.float32), 1, lane, value=jnp.inf)
+    top_ip = _pad_to(top_i.astype(jnp.int32), 1, lane, value=-1)
+
+    cp, dp = xp.shape[1], xp.shape[2]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(qn, beam),
+        in_specs=[
+            pl.BlockSpec((1, dp), lambda i, j, bsel, act: (i, 0)),
+            pl.BlockSpec((1, cp, dp), lambda i, j, bsel, act: (bsel[i, j], 0, 0)),
+            pl.BlockSpec((1, cp), lambda i, j, bsel, act: (bsel[i, j], 0)),
+            pl.BlockSpec((1, cp), lambda i, j, bsel, act: (bsel[i, j], 0)),
+            pl.BlockSpec((1, kkp), lambda i, j, bsel, act: (i, 0)),
+            pl.BlockSpec((1, kkp), lambda i, j, bsel, act: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, kkp), lambda i, j, bsel, act: (i, 0)),
+            pl.BlockSpec((1, kkp), lambda i, j, bsel, act: (i, 0)),
+        ],
+    )
+    vals, idxs = pl.pallas_call(
+        functools.partial(_scan_kernel, kk=kk),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((qn, kkp), jnp.float32),
+            jax.ShapeDtypeStruct((qn, kkp), jnp.int32),
+        ],
+        interpret=interpret,
+    )(
+        bsel.astype(jnp.int32),
+        act.astype(jnp.int32),
+        qp,
+        xp,
+        idsp,
+        scalep,
+        top_dp,
+        top_ip,
+    )
+    return vals[:, :kk], idxs[:, :kk]

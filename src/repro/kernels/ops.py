@@ -1,14 +1,24 @@
-"""Public jit'd wrappers for the Pallas kernels.
+"""Public jit'd wrappers for the Pallas kernels — the ONE dispatch layer.
 
-Dispatch policy:
+Every distance computed on the serving/search path (index routing, bucket
+lower bounds, bucket member scan, flat datastore scan) goes through this
+module, so backend tuning happens in exactly one place.
+
+Dispatch policy (each wrapper below):
 * On TPU: compiled Pallas kernels with MXU-aligned default tiles.
-* Elsewhere (this container is CPU): ``interpret=True`` executes the kernel
-  body in Python for correctness validation, but is slow — so small shapes
-  and non-TPU hot paths route to the jnp reference (identical math; the
-  kernels are validated against it in tests/test_kernels_pairwise.py).
+* ``REPRO_FORCE_PALLAS=1`` in the environment: the Pallas kernel body runs
+  under ``interpret=True`` everywhere (slow; Python-interpreted) — this is
+  how the kernel test sweeps validate kernel math off-TPU.
+* Otherwise (e.g. this container's CPU): the pure-jnp reference from
+  ``kernels/ref.py`` — identical math, validated against the kernels in
+  tests/test_kernels_pairwise.py and tests/test_bucket_scan.py.
 
-Set ``repro_kernels_force_pallas`` (env REPRO_FORCE_PALLAS=1) to force the
-Pallas path everywhere — used by the kernel test sweeps.
+Datastore storage knobs:
+* ``quantize_datastore`` produces the symmetric per-row int8 layout; the
+  ``*_int8`` kernels and the ``scale=`` argument of ``bucket_scan_topk``
+  dequantize in-register (4x less HBM traffic than f32 on the scan).
+  The forest equivalent is ``core.knn.device_forest(..., quantize=True)``,
+  which stores ``bucket_x`` int8 with per-member scales.
 """
 from __future__ import annotations
 
@@ -18,6 +28,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
+from repro.kernels.bucket_scan import bucket_scan_topk_pallas, prepad_buckets
 from repro.kernels.pairwise_l2 import (
     pairwise_sq_l2_int8_pallas,
     pairwise_sq_l2_pallas,
@@ -60,6 +71,47 @@ def knn_topk(q: Array, x: Array, *, k: int) -> tuple[Array, Array]:
     if _force_pallas():
         return knn_topk_pallas(q, x, k=k, bq=32, bn=64, interpret=True)
     return ref.knn_topk_ref(q, x, k)
+
+
+def bucket_scan_prepad(
+    bucket_x: Array, bucket_ids: Array, scale: Array | None = None
+) -> tuple[Array, Array, Array | None]:
+    """Apply ``bucket_scan_topk``'s padding policy once, at upload time.
+
+    Looping callers (core/knn.py's while-loop) pre-pad the datastore-sized
+    operands here so the defensive per-step pads inside the kernel wrapper
+    are no-ops instead of a full-datastore copy per step.  Identity on the
+    jnp-reference path (no tiling there).
+    """
+    if _on_tpu():
+        return prepad_buckets(bucket_x, bucket_ids, scale, interpret=False)
+    if _force_pallas():
+        return prepad_buckets(bucket_x, bucket_ids, scale, interpret=True)
+    return bucket_x, bucket_ids, scale
+
+
+def bucket_scan_topk(
+    q: Array,
+    bucket_x: Array,
+    bucket_ids: Array,
+    bsel: Array,
+    act: Array,
+    top_d: Array,
+    top_i: Array,
+    scale: Array | None = None,
+) -> tuple[Array, Array]:
+    """Fused forest-scan step: gather ``bsel`` buckets, distances, top-k merge.
+
+    See kernels/bucket_scan.py for the kernel and kernels/ref.py for the
+    oracle.  ``scale`` enables the int8 bucket storage path.
+    """
+    if _on_tpu():
+        return bucket_scan_topk_pallas(q, bucket_x, bucket_ids, bsel, act, top_d, top_i, scale)
+    if _force_pallas():
+        return bucket_scan_topk_pallas(
+            q, bucket_x, bucket_ids, bsel, act, top_d, top_i, scale, interpret=True
+        )
+    return ref.bucket_scan_topk_ref(q, bucket_x, bucket_ids, bsel, act, top_d, top_i, scale)
 
 
 def quantize_datastore(x: Array) -> tuple[Array, Array]:

@@ -36,6 +36,47 @@ def masked_knn_topk_ref(q: Array, x: Array, mask: Array, k: int) -> tuple[Array,
     return -neg, idx
 
 
+def bucket_scan_topk_ref(
+    q: Array,
+    bucket_x: Array,
+    bucket_ids: Array,
+    bsel: Array,
+    act: Array,
+    top_d: Array,
+    top_i: Array,
+    scale: Array | None = None,
+) -> tuple[Array, Array]:
+    """One forest-scan step: gather selected buckets, distance, top-k merge.
+
+    q (Q, D); bucket_x (NB, C, D) f32 or int8 (then ``scale`` (NB, C) holds
+    per-member dequant scales); bsel/act (Q, beam); top_d/top_i (Q, kk) the
+    running per-query top-k (squared distances ascending, object ids).
+    Members with id < 0 (padding) and buckets with act == False contribute
+    nothing.  Returns the merged (top_d, top_i).
+    """
+    qn, kk = top_d.shape
+    q = q.astype(jnp.float32)
+    bx = bucket_x[bsel]  # (Q, beam, C, D)
+    if scale is not None:
+        bx = bx.astype(jnp.float32) * scale[bsel][..., None].astype(jnp.float32)
+    else:
+        bx = bx.astype(jnp.float32)
+    bids = bucket_ids[bsel]  # (Q, beam, C)
+    live = (bids >= 0) & act[:, :, None]
+    d2 = (
+        jnp.sum(q * q, axis=-1)[:, None, None]
+        + jnp.sum(bx * bx, axis=-1)
+        - 2.0 * jnp.einsum("qbcd,qd->qbc", bx, q)
+    )
+    d2 = jnp.where(live, jnp.maximum(d2, 0.0), jnp.inf)
+    cand_d = d2.reshape(qn, -1)
+    cand_i = jnp.where(live, bids, -1).reshape(qn, -1)
+    merged_d = jnp.concatenate([top_d, cand_d], axis=1)
+    merged_i = jnp.concatenate([top_i, cand_i], axis=1)
+    neg, pos = jax.lax.top_k(-merged_d, kk)
+    return -neg, jnp.take_along_axis(merged_i, pos, axis=1)
+
+
 def pairwise_sq_l2_int8_ref(q: Array, x_q: Array, scale: Array) -> Array:
     """Quantized-datastore distances: x stored int8 with per-row scales.
 

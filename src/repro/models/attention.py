@@ -20,8 +20,20 @@ Array = jax.Array
 PyTree = Any
 
 
+def pos_cols(pos: Array, batch: int) -> Array:
+    """Positions as an i32 (B, 1) column; accepts a scalar or a (B,) vector.
+
+    The serving engine steps every slot at its OWN cache position
+    (continuous batching refills slots with shorter prompts mid-flight), so
+    the whole decode path accepts per-row positions.
+    """
+    p = jnp.reshape(jnp.asarray(pos, jnp.int32), (-1, 1))
+    return jnp.broadcast_to(p, (batch, 1))
+
+
 def cache_update(cache: Array, new: Array, pos: Array) -> Array:
-    """Write ``new`` (B, 1, ...) into ``cache`` (B, S, ...) at position pos.
+    """Write ``new`` (B, 1, ...) into ``cache`` (B, S, ...) at position pos
+    (scalar, or (B,) for per-row positions).
 
     Implemented as a masked select instead of dynamic_update_slice: DUS with
     a traced index on a sharded S dimension makes GSPMD all-gather the whole
@@ -29,7 +41,10 @@ def cache_update(cache: Array, new: Array, pos: Array) -> Array:
     select is shard-local — each shard touches only its own S slice.
     """
     s = cache.shape[1]
-    mask = (jnp.arange(s) == pos).reshape((1, s) + (1,) * (cache.ndim - 2))
+    cols = jnp.reshape(jnp.asarray(pos, jnp.int32), (-1, 1))  # (1|B, 1)
+    mask = (jnp.arange(s)[None, :] == cols).reshape(
+        (cols.shape[0], s) + (1,) * (cache.ndim - 2)
+    )
     return jnp.where(mask, new.astype(cache.dtype), cache)
 
 
@@ -107,8 +122,8 @@ def gqa_decode(
     *,
     rope: bool = True,
 ) -> tuple[Array, dict[str, Array]]:
-    """One-token decode. cache: {'k': (B,S,KV,hd), 'v': ..., }, pos scalar."""
-    positions = jnp.full((x.shape[0], 1), pos, jnp.int32)
+    """One-token decode. cache: {'k': (B,S,KV,hd), 'v': ...}; pos scalar or (B,)."""
+    positions = pos_cols(pos, x.shape[0])
     q, k, v = gqa_qkv(p, x, cfg, positions, rope=rope)
     k_cache = cache_update(cache["k"], k, pos)
     v_cache = cache_update(cache["v"], v, pos)
@@ -184,7 +199,7 @@ def mla_decode(
     """
     m = cfg.mla
     dt = x.dtype
-    positions = jnp.full((x.shape[0], 1), pos, jnp.int32)
+    positions = pos_cols(pos, x.shape[0])
     q_nope, q_rope = _mla_q(p, x, cfg, positions)  # (B,1,H,*)
     c_kv_new = x @ p["wdkv"].astype(dt)  # (B,1,lora)
     k_rope_new = apply_rope((x @ p["wk_rope"].astype(dt))[:, :, None, :], positions, cfg.rope_theta)[:, :, 0, :]
@@ -196,7 +211,8 @@ def mla_decode(
     s_r = jnp.einsum("bshk,btk->bhst", q_rope, r_cache.astype(dt))
     scale = (m.nope_head_dim + m.rope_head_dim) ** -0.5
     scores = (s_c + s_r).astype(jnp.float32) * scale
-    mask = jnp.arange(c_cache.shape[1])[None, None, None, :] < (pos + 1)
+    cur = jnp.reshape(jnp.asarray(pos, jnp.int32) + 1, (-1, 1))  # (1|B, 1)
+    mask = (jnp.arange(c_cache.shape[1])[None, :] < cur)[:, None, None, :]
     scores = jnp.where(mask, scores, -1e30)
     pattn = jax.nn.softmax(scores, axis=-1)
     # attend in compressed space, decompress with W_uv afterwards

@@ -77,7 +77,9 @@ class Model:
         cdt = dtype_of(self.cfg.compute_dtype)
         x = params["embed"][tokens].astype(cdt)
         if self.cfg.family == "encdec":
-            # whisper: learned-position stand-in (sinusoidal, offset-aware)
+            # whisper: learned-position stand-in (sinusoidal, offset-aware);
+            # pos0 may be a scalar or a per-row (B,) vector (serving slots)
+            pos0 = jnp.reshape(jnp.asarray(pos0, jnp.int32), (-1, 1))
             positions = pos0 + jnp.arange(tokens.shape[1])[None, :]
             x = x + sinusoidal_at(positions, self.cfg.d_model).astype(cdt)
         return logical_constraint(x, ("batch", "seq", "embed"))
@@ -175,11 +177,14 @@ class Model:
         params: PyTree,
         tokens: Array,  # (B, 1)
         cache: PyTree,
-        pos: Array,  # scalar: current position
+        pos: Array,  # current position: scalar, or (B,) per-slot positions
         *,
         datastore: PyTree | None = None,
     ) -> tuple[Array, PyTree]:
         """One decode step. Returns (logits (B, V), new_cache).
+
+        ``pos`` may be a (B,) vector so a continuous-batching engine can
+        advance every slot at its own cache position in one jitted step.
 
         When ``datastore`` is provided and cfg.retrieval.enabled, the output
         distribution is interpolated with the kNN-LM distribution retrieved

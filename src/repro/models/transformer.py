@@ -228,7 +228,7 @@ def sublayer_decode(
             {"k": cache["k"], "v": cache["v"]}, pos, rope=False,
         )
         x = x + h
-        positions = jnp.full((x.shape[0], 1), pos, jnp.int32)
+        positions = attn.pos_cols(pos, x.shape[0])
         x = x + attn.gqa_cross_forward(
             p["cross"], layer_norm(x, p["ln2"], p["lb2"], eps),
             cache["ck"], cache["cv"], cfg, positions,

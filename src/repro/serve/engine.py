@@ -37,6 +37,7 @@ class Request:
     out_tokens: list[int] = field(default_factory=list)
     done: bool = False
     latency_s: float = 0.0
+    _t0: float = 0.0  # perf_counter at slot admission (latency accounting)
 
 
 class ServeEngine:
@@ -111,21 +112,24 @@ class ServeEngine:
             live = [s for s in range(self.num_slots) if self.slot_req[s] is not None]
             if not live:
                 break
-            # one position per step (uniform stepping: max of live positions
-            # is bounded by max_len; empty slots decode garbage, ignored)
-            pos = int(max(self.slot_pos[s] for s in live))
+            # per-slot positions: a freshly refilled slot with a shorter
+            # prompt keeps decoding at ITS cache position — stepping every
+            # slot at max(live positions) would skip past the refilled
+            # slot's prompt and corrupt its decode.  Empty slots step at
+            # their stale position and decode garbage, ignored.
             tokens = np.zeros((self.num_slots, 1), np.int32)
             for s in live:
                 tokens[s, 0] = self.slot_req[s].out_tokens[-1]
             nxt, self.cache = self._decode(
-                self.params, jnp.asarray(tokens), self.cache, jnp.int32(pos)
+                self.params, jnp.asarray(tokens), self.cache,
+                jnp.asarray(self.slot_pos),
             )
             self.steps += 1
             nxt = np.asarray(nxt)
             for s in live:
                 req = self.slot_req[s]
                 req.out_tokens.append(int(nxt[s]))
-                self.slot_pos[s] = pos + 1
+                self.slot_pos[s] += 1
                 if len(req.out_tokens) >= req.max_new_tokens \
                         or self.slot_pos[s] >= self.max_len - 1:
                     req.done = True

@@ -77,9 +77,12 @@ def build_forest_datastore(
     method: str = "vbm",
     eps: float | None = None,
     min_pts: int = 16,
+    quantized: bool = False,
 ) -> ForestDatastore:
     """Build the paper's index over the datastore keys (host-side, like any
-    vector store's build path)."""
+    vector store's build path).  ``quantized`` stores bucket members int8
+    (device_forest's storage knob) — bounds stay f32, only the member scan
+    dequantizes in-register."""
     from repro.core import IndexConfig, build_index
     from repro.core.knn import device_forest
 
@@ -93,17 +96,24 @@ def build_forest_datastore(
     cfg = IndexConfig(method=method, eps=eps, min_pts=min_pts, dbscan_block=2048)
     forest, _ = build_index(np.asarray(keys, np.float32), cfg)
     return ForestDatastore(
-        forest=device_forest(forest), values=jnp.asarray(values, jnp.int32)
+        forest=device_forest(forest, quantize=quantized),
+        values=jnp.asarray(values, jnp.int32),
     )
 
 
 def forest_knn(
-    hidden: Array, ds: ForestDatastore, k: int
+    hidden: Array, ds: ForestDatastore, k: int, *, kernel: bool = True
 ) -> tuple[Array, Array]:
-    """(distances (B,k), token values (B,k)) via the paper's Alg. 2 search."""
+    """(distances (B,k), token values (B,k)) via the paper's Alg. 2 search.
+
+    ``kernel`` selects the kernels/ops dispatch path (fused Pallas bucket
+    scan on TPU) vs the pure-jnp reference — see core.knn.knn_search.
+    """
     from repro.core.knn import knn_search
 
-    d, ids, _ = knn_search(ds.forest, hidden.astype(jnp.float32), k=k, mode="forest")
+    d, ids, _ = knn_search(
+        ds.forest, hidden.astype(jnp.float32), k=k, mode="forest", kernel=kernel
+    )
     vals = ds.values[jnp.clip(ids, 0, ds.values.shape[0] - 1)]
     vals = jnp.where(ids >= 0, vals, 0)
     d = jnp.where(ids >= 0, d, jnp.inf)
@@ -128,7 +138,7 @@ def knn_logits(
     """
     r = cfg.retrieval
     if isinstance(ds, ForestDatastore):
-        d2, vals = forest_knn(hidden, ds, r.k)
+        d2, vals = forest_knn(hidden, ds, r.k, kernel=r.kernel)
         w = jax.nn.softmax(-jnp.sqrt(jnp.maximum(d2, 0.0)) / r.temperature, axis=-1)
         p_knn = jnp.zeros((hidden.shape[0], cfg.padded_vocab), jnp.float32)
         return p_knn.at[jnp.arange(hidden.shape[0])[:, None], vals].add(w)
@@ -153,7 +163,7 @@ def knn_logits(
             return -neg, jnp.take_along_axis(v_all, pos, axis=1)
 
         scale_spec = P(dctx.MODEL_AXIS) if ds.scale is not None else None
-        d2, vals = jax.shard_map(
+        d2, vals = dctx.shard_map(
             island,
             mesh=mesh,
             in_specs=(P(), P(dctx.MODEL_AXIS, None), P(dctx.MODEL_AXIS), scale_spec),

@@ -1,0 +1,88 @@
+"""Minimal stand-in for the ``hypothesis`` API used by this repo's tests.
+
+The property tests (tests/test_knn.py, test_overlap.py, test_substrate.py)
+use only ``@settings(max_examples=..., deadline=None)``, ``@given(**kwargs)``
+and the ``st.integers`` / ``st.floats`` strategies.  When real hypothesis is
+installed (declared in pyproject.toml's ``test`` extra; CI installs it) the
+tests use it; in hermetic environments without it, this fallback keeps the
+suite collectable and runs each property over a fixed number of
+deterministically drawn examples.
+
+It is NOT a shrinker and does no example database — it exists so a missing
+optional dependency degrades to plain seeded sampling instead of an
+ImportError that kills collection of entire test modules.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+
+import numpy as np
+
+_DEFAULT_MAX_EXAMPLES = 100
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def draw(self, rng: np.random.Generator):
+        return self._draw(rng)
+
+
+class strategies:
+    """Namespace mirroring ``hypothesis.strategies`` (subset)."""
+
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> _Strategy:
+        return _Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+    @staticmethod
+    def floats(
+        min_value: float,
+        max_value: float,
+        *,
+        allow_nan: bool = False,
+        allow_infinity: bool = False,
+        **_: object,
+    ) -> _Strategy:
+        return _Strategy(lambda rng: float(rng.uniform(min_value, max_value)))
+
+    @staticmethod
+    def sampled_from(elements) -> _Strategy:
+        elements = list(elements)
+        return _Strategy(lambda rng: elements[int(rng.integers(len(elements)))])
+
+    @staticmethod
+    def booleans() -> _Strategy:
+        return _Strategy(lambda rng: bool(rng.integers(2)))
+
+
+def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, deadline=None, **_):
+    """Attach the example budget; composes with ``@given`` in either order."""
+
+    def deco(fn):
+        fn._fallback_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(**strats: _Strategy):
+    """Run the test over deterministically drawn examples of each strategy."""
+
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper():
+            n = getattr(wrapper, "_fallback_max_examples", None) or getattr(
+                fn, "_fallback_max_examples", _DEFAULT_MAX_EXAMPLES
+            )
+            rng = np.random.default_rng(0)
+            for _ in range(n):
+                fn(**{name: s.draw(rng) for name, s in strats.items()})
+
+        # Hide the wrapped signature from pytest: drawn args are not fixtures.
+        wrapper.__signature__ = inspect.Signature(parameters=[])
+        return wrapper
+
+    return deco

@@ -8,8 +8,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ModuleNotFoundError:  # optional dep: degrade to seeded sampling
+    from repro.testing.hypothesis_fallback import given, settings
+    from repro.testing.hypothesis_fallback import strategies as st
 
 from repro.checkpoint.checkpointing import (
     restore_latest,
