@@ -8,7 +8,14 @@ import time
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import METHODS, emit, index_config, load_datasets
+from benchmarks.common import (
+    METHODS,
+    emit,
+    index_config,
+    load_datasets,
+    record,
+    write_artifact,
+)
 from repro.core import build_baseline, build_index, knn_exact, knn_search_host
 
 K_VALUES = (5, 10, 15, 20, 50, 100)
@@ -68,6 +75,16 @@ def run(
                     f"recall={recall:.3f};time_ms={dt*1e3/len(q):.3f}"
                 )
                 emit(f"search/{ds.name}/{method}/k{k}", dt * 1e6 / len(q), derived)
+                record(
+                    "search", f"{ds.name}/{method}/k{k}",
+                    dataset=ds.name, method=method, k=k,
+                    dist=float(stats["distances"].mean()),
+                    bound_dist=float(stats["bound_distances"].mean()),
+                    cmp=float(stats["comparisons"].mean()),
+                    buckets=float(stats["buckets_visited"].mean()),
+                    recall=recall,
+                    us_per_query=dt * 1e6 / len(q),
+                )
                 if out is not None:
                     out[f"{ds.name}/{method}/k{k}"] = {
                         "dist": float(stats["distances"].mean()),
@@ -75,6 +92,7 @@ def run(
                         "recall": recall,
                         "ms_per_query": dt * 1e3 / len(q),
                     }
+    write_artifact("search", meta=dict(full=full, kernel=kernel, quantize=quantize))
 
 
 if __name__ == "__main__":

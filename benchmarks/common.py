@@ -1,6 +1,9 @@
-"""Shared benchmark utilities: datasets, configs, CSV output."""
+"""Shared benchmark utilities: datasets, configs, CSV + JSON artifacts."""
 from __future__ import annotations
 
+import json
+import os
+import platform
 import sys
 import time
 from dataclasses import dataclass
@@ -65,3 +68,49 @@ class Timer:
 
 def emit(name: str, us_per_call: float, derived: str) -> None:
     print(f"{name},{us_per_call:.2f},{derived}")
+
+
+# ---------------------------------------------------------------------------
+# Machine-readable artifacts: every benchmark run writes BENCH_<name>.json
+# so the perf trajectory is diffable across commits (the CSV lines above are
+# for eyeballs; these files are for tooling/CI).
+# ---------------------------------------------------------------------------
+
+_RECORDS: dict[str, list[dict]] = {}
+
+
+def record(bench: str, name: str, **fields) -> None:
+    """Append one datapoint to the ``bench`` artifact (written at exit of
+    the benchmark's run() via ``write_artifact``)."""
+    _RECORDS.setdefault(bench, []).append(dict(name=name, **fields))
+
+
+def write_artifact(bench: str, meta: dict | None = None) -> str:
+    """Write BENCH_<bench>.json into $REPRO_BENCH_DIR (default: CWD).
+
+    Schema: {"bench", "meta": {backend, jax, numpy, python, unix_time},
+    "records": [{"name", ...datapoint fields}]}.  Returns the path.
+    """
+    import jax
+
+    out_dir = os.environ.get("REPRO_BENCH_DIR", ".")
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"BENCH_{bench}.json")
+    payload = {
+        "bench": bench,
+        "meta": {
+            "backend": jax.default_backend(),
+            "jax": jax.__version__,
+            "numpy": np.__version__,
+            "python": platform.python_version(),
+            "unix_time": time.time(),
+            **(meta or {}),
+        },
+        # pop: a second run() in the same process must not concatenate its
+        # records onto this artifact's
+        "records": _RECORDS.pop(bench, []),
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, sort_keys=True)
+    print(f"# wrote {path} ({len(payload['records'])} records)")
+    return path

@@ -1,0 +1,124 @@
+"""End-to-end IoT streaming demo: continuous ingest + overlap-driven online
+index maintenance (src/repro/stream/).
+
+A 10k-object forest is built once (the paper's static pipeline), then an
+IoT-style stream arrives in batches — in-distribution sensor readings plus a
+drifting corridor of readings between two regions, the classic failure mode
+for a frozen partition layout.  While ingesting, the demo keeps issuing kNN
+queries and at every checkpoint PROVES the serving invariant:
+
+    search over frozen-forest + delta-buckets == brute force over every
+    object ever ingested (up to f32 distance-expansion rounding),
+
+including immediately before and immediately after each maintenance rebuild
+swap — i.e. the hot swap has no search-correctness gap.  The corridor drift
+pushes the monitored DBM overlap rate past the rebuild threshold ξ, so at
+least one rebuild is *overlap*-triggered (the paper's own heuristic acting
+as the online repartitioning signal), not merely buffer-fill-triggered.
+
+    PYTHONPATH=src python examples/iot_stream.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import IndexConfig, knn_exact
+from repro.stream import MaintenanceConfig, StreamingForest
+
+N_SEED = 10_000
+N_STREAM = 10_240
+BATCH = 512
+DIM = 8
+K = 10
+
+
+def seed_data(g: np.random.Generator) -> np.ndarray:
+    centers = g.normal(size=(8, DIM)) * 10.0
+    lab = g.integers(0, 8, N_SEED)
+    return (centers[lab] + g.normal(size=(N_SEED, DIM))).astype(np.float32), centers
+
+
+def stream_batches(g: np.random.Generator, centers: np.ndarray) -> list[np.ndarray]:
+    """Half in-distribution arrivals, half corridor drift between the two
+    closest regions — the overlap-rate driver."""
+    d = ((centers[:, None] - centers[None, :]) ** 2).sum(-1)
+    np.fill_diagonal(d, np.inf)
+    a, b = np.unravel_index(np.argmin(d), d.shape)
+    batches = []
+    for t in range(N_STREAM // BATCH):
+        lab = g.integers(0, len(centers), BATCH // 2)
+        in_dist = centers[lab] + g.normal(size=(BATCH // 2, DIM))
+        frac = g.uniform(0.25, 0.75, size=(BATCH // 2, 1))
+        corridor = centers[a] * (1 - frac) + centers[b] * frac + g.normal(
+            size=(BATCH // 2, DIM)) * (1.0 + 0.25 * t)
+        batches.append(np.concatenate([in_dist, corridor]).astype(np.float32))
+    return batches
+
+
+def check_exact(sf: StreamingForest, g: np.random.Generator, tag: str) -> None:
+    x_all = sf.x_all
+    qi = g.choice(sf.n_total, 32, replace=False)
+    q = (x_all[qi] + 0.05 * g.normal(size=(32, DIM))).astype(np.float32)
+    d, ids, stats = sf.search(q, k=K, mode="all")
+    de, _ = knn_exact(jnp.asarray(x_all), jnp.asarray(q), k=K)
+    # Both paths use the f32 ||q||^2+||x||^2-2qx expansion but reassociate
+    # differently (bucketed vs flat scan): ~5e-3 at these coordinate scales.
+    np.testing.assert_allclose(
+        np.asarray(d), np.asarray(de), rtol=5e-3, atol=5e-3)
+    print(f"  [{tag}] exact over {sf.n_total} objects "
+          f"(mean buckets visited {np.asarray(stats.buckets_visited).mean():.1f})")
+
+
+def main() -> None:
+    g = np.random.default_rng(42)
+    x0, centers = seed_data(g)
+    t0 = time.perf_counter()
+    sf = StreamingForest(
+        x0,
+        IndexConfig(method="vbm", eps=2.5, min_pts=8),
+        MaintenanceConfig(method="dbm", xi_rebuild=0.55, fill_rebuild=0.8),
+        delta_capacity=1024,
+    )
+    print(f"seed forest: {sf.forest.n_indexes} indexes, {sf.forest.n_buckets} "
+          f"buckets over {N_SEED} objects ({time.perf_counter() - t0:.1f}s build)")
+
+    overlap_rebuilds = 0
+    for bi, xb in enumerate(stream_batches(g, centers)):
+        sf.ingest(xb)
+        # queries keep flowing against forest+delta between maintenance
+        q = (xb[:16] + 0.05 * g.normal(size=(16, DIM))).astype(np.float32)
+        d, ids, _ = sf.search(q, k=K, mode="forest")
+        assert (np.asarray(ids)[:, 0] >= 0).all()
+
+        report = sf.check()
+        if report.should_rebuild:
+            check_exact(sf, g, f"batch {bi:2d} pre-swap ")  # before the swap...
+            sf.maintain()
+            check_exact(sf, g, f"batch {bi:2d} post-swap")  # ...and right after
+            reasons = sorted({r for v in sf.rebuild_log[-1]["reasons"].values()
+                              for r in v})
+            overlap_rebuilds += int("overlap" in reasons)
+            print(f"  batch {bi:2d}: rebuilt {len(report.triggers)} indexes "
+                  f"({'+'.join(reasons)}); worst rate "
+                  f"{report.rates.max():.2f} -> "
+                  f"{sf.monitor.rates_baseline.max():.2f}")
+        elif bi % 4 == 3:
+            check_exact(sf, g, f"batch {bi:2d} checkpoint")
+
+    check_exact(sf, g, "final")
+    s = sf.structure()
+    print(f"ingested {sf.n_total - N_SEED} objects in {N_STREAM // BATCH} batches; "
+          f"{s['rebuilds']} index rebuilds ({overlap_rebuilds} overlap-triggered), "
+          f"{s['total_leaves']} buckets, delta fill {sum(s['delta_fill'])}")
+    assert sf.n_total - N_SEED >= 10_000, "demo must stream >= 10k objects"
+    assert overlap_rebuilds >= 1, "an overlap-triggered rebuild must fire"
+    print("streaming ingest + online maintenance OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -3,20 +3,24 @@
 forest of BCCF trees) with a jittable, TPU-native kNN search."""
 from repro.core.dbscan import DBSCANResult, dbscan, partitions_from_labels
 from repro.core.decision import DecisionStats, Partition, decide
-from repro.core.forest import ForestArrays, build_forest
+from repro.core.forest import ForestArrays, build_forest, swap_trees
 from repro.core.knn import (
+    DeltaView,
     DeviceForest,
     SearchStats,
     device_forest,
     knn_exact,
     knn_search,
     knn_search_host,
+    route_eligibility,
+    route_points,
 )
 from repro.core.overlap import (
     ball_log_volume,
     cap_log_volume,
     dbm_rate,
     intersection_log_volume,
+    max_neighbor_rate,
     obm_rate,
     overlap_matrix,
     vbm_rate,
@@ -27,15 +31,18 @@ from repro.core.pipeline import (
     build_baseline,
     build_index,
     default_c_max,
+    default_delta_capacity,
 )
 
 __all__ = [
     "DBSCANResult", "dbscan", "partitions_from_labels",
     "DecisionStats", "Partition", "decide",
-    "ForestArrays", "build_forest",
-    "DeviceForest", "SearchStats", "device_forest",
+    "ForestArrays", "build_forest", "swap_trees",
+    "DeltaView", "DeviceForest", "SearchStats", "device_forest",
     "knn_exact", "knn_search", "knn_search_host",
+    "route_eligibility", "route_points",
     "ball_log_volume", "cap_log_volume", "dbm_rate", "intersection_log_volume",
-    "obm_rate", "overlap_matrix", "vbm_rate",
-    "BuildReport", "IndexConfig", "build_baseline", "build_index", "default_c_max",
+    "max_neighbor_rate", "obm_rate", "overlap_matrix", "vbm_rate",
+    "BuildReport", "IndexConfig", "build_baseline", "build_index",
+    "default_c_max", "default_delta_capacity",
 ]

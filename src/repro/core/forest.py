@@ -54,7 +54,22 @@ class ForestArrays:
         return int(self.bucket_x.shape[0])
 
     def aggregate_structure(self) -> dict[str, Any]:
-        """Structure-evaluation rollup (paper Figs. 6-19)."""
+        """Structure-evaluation rollup (paper Figs. 6-19).
+
+        Derived from the per-tree host copies in ``self.trees`` — rebuild
+        swaps (stream/maintenance.py) go through ``swap_trees``, which
+        refreshes those copies and re-flattens the device arrays together,
+        so this rollup can never describe a stale structure.  The rollup
+        cross-checks itself against the flattened arrays and refuses to
+        report numbers that disagree with what search actually scans.
+        """
+        total_leaves = sum(t.structure.n_leaves for t in self.trees)
+        if self.trees and total_leaves != self.n_buckets:
+            raise RuntimeError(
+                f"stale forest structure: trees report {total_leaves} leaves "
+                f"but the flattened arrays hold {self.n_buckets} buckets — "
+                "tree swaps must go through forest.swap_trees"
+            )
         per_tree = []
         for t in self.trees:
             s = t.structure
@@ -79,29 +94,19 @@ class ForestArrays:
         )
 
 
-def build_forest(
-    x: np.ndarray,
-    groups: list[Partition],
-    *,
-    c_max: int,
-    pivot_method: str = "gh",
-    seed: int = 0,
-) -> ForestArrays:
-    """Build one BCCF tree per decision group and flatten into a forest."""
-    x = np.asarray(x, np.float32)
+def _flatten_trees(
+    x: np.ndarray, trees: list[FlatTree], *, c_max: int
+) -> dict[str, np.ndarray]:
+    """Flatten per-tree buckets into the fixed-shape SoA device layout.
+
+    Shared by the initial build and by rebuild swaps (``swap_trees``) so the
+    two paths can never drift apart on padding/pivot/radius conventions.
+    """
     dim = x.shape[1]
-    trees: list[FlatTree] = []
-    counters = BuildCounters()
     bucket_rows: list[np.ndarray] = []
     bucket_idrows: list[np.ndarray] = []
     bucket_owner: list[int] = []
-    for gi, g in enumerate(groups):
-        tree = build_tree(
-            x[g.members], g.members, c_max=c_max, pivot_method=pivot_method, seed=seed + gi
-        )
-        trees.append(tree)
-        counters.distances += tree.counters.distances
-        counters.comparisons += tree.counters.comparisons
+    for gi, tree in enumerate(trees):
         for members in tree.bucket_members:
             bucket_rows.append(x[members])
             bucket_idrows.append(np.asarray(members, np.int64))
@@ -122,7 +127,38 @@ def build_forest(
         piv = pts.mean(axis=0)
         bucket_pivot[i] = piv
         bucket_radius[i] = np.sqrt(((pts - piv) ** 2).sum(-1)).max() if m else 0.0
+    return dict(
+        bucket_x=bucket_x,
+        bucket_ids=bucket_ids,
+        bucket_mask=bucket_mask,
+        bucket_pivot=bucket_pivot,
+        bucket_radius=bucket_radius,
+        bucket_index=np.array(bucket_owner, np.int32),
+        c_max=int(cap),
+    )
 
+
+def build_forest(
+    x: np.ndarray,
+    groups: list[Partition],
+    *,
+    c_max: int,
+    pivot_method: str = "gh",
+    seed: int = 0,
+) -> ForestArrays:
+    """Build one BCCF tree per decision group and flatten into a forest."""
+    x = np.asarray(x, np.float32)
+    trees: list[FlatTree] = []
+    counters = BuildCounters()
+    for gi, g in enumerate(groups):
+        tree = build_tree(
+            x[g.members], g.members, c_max=c_max, pivot_method=pivot_method, seed=seed + gi
+        )
+        trees.append(tree)
+        counters.distances += tree.counters.distances
+        counters.comparisons += tree.counters.comparisons
+
+    flat = _flatten_trees(x, trees, c_max=c_max)
     max_nbr = max((len(g.neighbors) for g in groups), default=0)
     neighbors = np.full((len(groups), max(max_nbr, 1)), -1, np.int32)
     for i, g in enumerate(groups):
@@ -133,16 +169,69 @@ def build_forest(
         index_radii=np.array([g.radius for g in groups], np.float32),
         neighbors=neighbors,
         is_overlap_index=np.array([g.is_overlap_index for g in groups], bool),
-        bucket_x=bucket_x,
-        bucket_ids=bucket_ids,
-        bucket_mask=bucket_mask,
-        bucket_pivot=bucket_pivot,
-        bucket_radius=bucket_radius,
-        bucket_index=np.array(bucket_owner, np.int32),
-        c_max=int(cap),
         trees=trees,
         build_stats=dict(
             tree_distances=counters.distances,
             tree_comparisons=counters.comparisons,
+            rebuilds=0,
         ),
+        **flat,
+    )
+
+
+def swap_trees(
+    forest: ForestArrays,
+    x: np.ndarray,
+    replacements: dict[int, FlatTree],
+    *,
+    index_centers: np.ndarray | None = None,
+    index_radii: np.ndarray | None = None,
+) -> ForestArrays:
+    """Swap freshly rebuilt per-index trees into a forest (hot rebuild path).
+
+    Returns a NEW ForestArrays (the old one keeps serving until the caller
+    swaps the device upload) with:
+
+    * the flattened bucket arrays re-derived from the updated tree set via
+      the same ``_flatten_trees`` the initial build uses,
+    * the host-side ``trees`` list refreshed — ``aggregate_structure`` stays
+      truthful after the swap instead of describing dead trees,
+    * ``build_stats`` counters ACCUMULATED (initial build + every rebuild so
+      far + this one), because the paper's construction-cost metric must
+      include maintenance work, plus a ``rebuilds`` tally,
+    * optionally updated index geometry (post-ingest centroids/radii from
+      the maintenance monitor).
+
+    ``x`` must cover every global object id referenced by any tree
+    (the streaming caller passes its full accumulated dataset).
+    """
+    x = np.asarray(x, np.float32)
+    trees = list(forest.trees)
+    add = BuildCounters()
+    for gi, tree in replacements.items():
+        if not (0 <= gi < len(trees)):
+            raise ValueError(f"replacement for unknown index {gi}")
+        trees[gi] = tree
+        add.distances += tree.counters.distances
+        add.comparisons += tree.counters.comparisons
+
+    flat = _flatten_trees(x, trees, c_max=forest.c_max)
+    centers = forest.index_centers.copy() if index_centers is None else (
+        np.asarray(index_centers, np.float32)
+    )
+    radii = forest.index_radii.copy() if index_radii is None else (
+        np.asarray(index_radii, np.float32)
+    )
+    stats = dict(forest.build_stats)
+    stats["tree_distances"] = stats.get("tree_distances", 0) + add.distances
+    stats["tree_comparisons"] = stats.get("tree_comparisons", 0) + add.comparisons
+    stats["rebuilds"] = stats.get("rebuilds", 0) + len(replacements)
+    return ForestArrays(
+        index_centers=centers,
+        index_radii=radii,
+        neighbors=forest.neighbors.copy(),
+        is_overlap_index=forest.is_overlap_index.copy(),
+        trees=trees,
+        build_stats=stats,
+        **flat,
     )

@@ -28,6 +28,16 @@ nearest leaf).
 prove the scan is EXACT against brute force, and by callers who want exact
 global kNN at higher cost.
 
+Streaming deltas (repro.stream): ``knn_search(..., delta=DeltaView)`` runs a
+SECOND bounded scan phase over the per-index delta tail buckets (the
+device-resident append buffers of stream/ingest.py), seeded with the main
+phase's top-k carry.  The delta buckets behave exactly like forest buckets
+(pivot/radius lower bounds, same fused kernel step); because lower bounds are
+only ever pruning conditions, splitting the scan into two phases preserves
+exactness — the main phase merely prunes against a k-th best that ignores
+delta members (visits a superset), and the delta phase prunes against the
+true running k-th best.
+
 Under-filled selections: when the selected indexes hold fewer than k
 objects, the k-th best distance stays +inf and the bounded scan naturally
 SPILLS into the next-nearest non-selected buckets until k answers exist —
@@ -65,6 +75,23 @@ class DeviceForest(NamedTuple):
     bucket_scale: Array | None = None  # (NB, C) f32 dequant scales (int8 mode)
 
 
+class DeltaView(NamedTuple):
+    """Search-facing view of the streaming delta buffers (repro.stream).
+
+    One delta bucket per index: fixed-capacity tail arrays appended to by
+    stream/ingest.ingest.  ``pivot`` is the reference point the running
+    ``radius`` bound is maintained against (the owning index's center at
+    buffer allocation), so ``max(0, d(q, pivot) - radius)`` is a valid lower
+    bound on any member distance.  Unfilled slots carry id -1 (the same
+    padding contract as ``DeviceForest.bucket_ids``)."""
+
+    x: Array  # (I, CAPD, D) f32
+    ids: Array  # (I, CAPD) i32, -1 pad
+    mask: Array  # (I, CAPD) bool
+    pivot: Array  # (I, D) f32
+    radius: Array  # (I,) f32
+
+
 class SearchStats(NamedTuple):
     buckets_visited: Array  # (Q,) i32
     distances: Array  # (Q,) i32  useful (unpadded) OBJECT distances
@@ -99,6 +126,113 @@ def device_forest(f: ForestArrays, *, quantize: bool = False) -> DeviceForest:
     )
 
 
+def route_points(centers: Array, q: Array, *, kernel: bool = True) -> tuple[Array, Array]:
+    """Alg. 2 STEP 1 routing: distances to index centers + closest index.
+
+    Shared by the query path (knn_search) and the streaming ingest router
+    (stream/ingest.ingest) — both assign a point to its nearest index center.
+    Returns (d_idx (Q, I) squared distances, closest (Q,) i32).
+    """
+    d_idx = pairwise(q, centers, metric="sq_l2", use_kernel=kernel)  # (Q, I)
+    return d_idx, jnp.argmin(d_idx, axis=1).astype(jnp.int32)
+
+
+def route_eligibility(closest: Array, neighbors: Array) -> Array:
+    """(Q, I) bool: closest index + its overlap-index neighbors, per query.
+
+    Scatter formulation via ``segment_max``: each query contributes
+    1 + MAXNBR (query, index) pairs; one segment per (query, index) cell.
+    Replaces the (Q, I, MAXNBR) one-hot mask product — the one-hot path
+    materialized O(Q * I * MAXNBR) work for what is O(Q * MAXNBR) pairs,
+    which matters for forests with many indexes (ROADMAP item).
+    """
+    n_idx = neighbors.shape[0]
+    qn = closest.shape[0]
+    nbrs = neighbors[closest]  # (Q, MAXNBR)
+    cand = jnp.concatenate(
+        [closest[:, None], jnp.where(nbrs >= 0, nbrs, 0)], axis=1
+    )  # (Q, 1 + MAXNBR), invalid links parked on index 0 with value 0
+    val = jnp.concatenate(
+        [jnp.ones((qn, 1), jnp.int32), (nbrs >= 0).astype(jnp.int32)], axis=1
+    )
+    seg = (cand.astype(jnp.int32) + n_idx * jnp.arange(qn, dtype=jnp.int32)[:, None]).ravel()
+    sel = jax.ops.segment_max(val.ravel(), seg, num_segments=qn * n_idx)
+    return sel.reshape(qn, n_idx) > 0
+
+
+class _Carry(NamedTuple):
+    top_d: Array  # (Q, kk) ascending squared dists
+    top_i: Array  # (Q, kk) ids
+    t: Array
+    visits: Array
+    ndist: Array
+    npad: Array
+
+
+def _sorted_bounds(lb: Array, beam: int) -> tuple[Array, Array, Array]:
+    """Ascending visit order + sorted bounds, padded to a beam multiple."""
+    nb = lb.shape[1]
+    order = jnp.argsort(lb, axis=1)
+    lb_sorted = jnp.take_along_axis(lb, order, axis=1)
+    n_steps = -(-nb // beam)  # ceil
+    pad = n_steps * beam - nb
+    if pad:
+        order = jnp.pad(order, ((0, 0), (0, pad)))
+        lb_sorted = jnp.pad(lb_sorted, ((0, 0), (0, pad)), constant_values=jnp.inf)
+    return order, lb_sorted, jnp.int32(n_steps)
+
+
+def _scan_phase(
+    carry: _Carry,
+    q: Array,
+    order: Array,
+    lb_sorted: Array,
+    n_steps: Array,
+    beam: int,
+    scan_step,
+    scan_x: Array,
+    scan_ids: Array,
+    scan_scale: Array | None,
+    bucket_count: Array,
+    cap: int,
+) -> _Carry:
+    """One bounded best-first scan phase (main buckets or delta buckets).
+
+    Visits buckets in ascending-lb order until lb > kth-best for every query
+    (exact termination: lb is sorted and kth-best is non-increasing).  The
+    carry's top-k streams THROUGH phases: the delta phase starts from the
+    main phase's result and keeps merging into the same (Q, kk) state.
+    """
+
+    def active_mask(c: _Carry) -> Array:
+        kth = jnp.sqrt(c.top_d[:, -1])  # inf until kk found
+        cur_lb = jax.lax.dynamic_slice_in_dim(lb_sorted, c.t * beam, beam, axis=1)
+        return cur_lb <= kth[:, None]  # (Q, beam)
+
+    def cond(c: _Carry) -> Array:
+        return (c.t < n_steps) & jnp.any(active_mask(c))
+
+    def body(c: _Carry) -> _Carry:
+        act = active_mask(c)  # (Q, beam)
+        bsel = jax.lax.dynamic_slice_in_dim(order, c.t * beam, beam, axis=1)
+        # fused gather -> squared-L2 -> running top-k merge (one kernel step;
+        # the (Q, beam, C, D) gather never materializes on the kernel path)
+        new_d, new_i = scan_step(
+            q, scan_x, scan_ids, bsel, act, c.top_d, c.top_i, scan_scale
+        )
+        n_members = jnp.where(act, bucket_count[bsel], 0)  # (Q, beam)
+        return _Carry(
+            top_d=new_d,
+            top_i=new_i,
+            t=c.t + 1,
+            visits=c.visits + jnp.sum(act, axis=1, dtype=jnp.int32),
+            ndist=c.ndist + jnp.sum(n_members, axis=1, dtype=jnp.int32),
+            npad=c.npad + jnp.sum(act, axis=1, dtype=jnp.int32) * cap,
+        )
+
+    return jax.lax.while_loop(cond, body, carry)
+
+
 @functools.partial(jax.jit, static_argnames=("k", "mode", "beam", "kernel"))
 def knn_search(
     forest: DeviceForest,
@@ -108,6 +242,7 @@ def knn_search(
     mode: str = "forest",
     beam: int = 1,
     kernel: bool = True,
+    delta: DeltaView | None = None,
 ) -> tuple[Array, Array, SearchStats]:
     """Batched kNN over the forest. Returns (dists (Q,k), ids (Q,k), stats).
 
@@ -119,25 +254,25 @@ def knn_search(
     through the ``repro.kernels.ops`` dispatch layer (compiled Pallas on TPU,
     interpret under REPRO_FORCE_PALLAS=1, jnp reference elsewhere).
     ``kernel=False`` forces the pure-jnp reference path end to end.
+
+    ``delta`` (a DeltaView) adds the streaming delta buckets as a second scan
+    phase: the same bounded best-first scan, seeded with the main phase's
+    top-k carry, over the per-index append buffers.  Results are then exact
+    over main forest + delta members (within the mode's selection semantics).
     """
     qn = q.shape[0]
     n_idx = forest.index_centers.shape[0]
     nb, cap, _ = forest.bucket_x.shape
-    kk = min(k, nb * cap)
+    n_cap = nb * cap
+    if delta is not None:
+        dcap = delta.x.shape[1]
+        n_cap += n_idx * dcap
+    kk = min(k, n_cap)
 
     # ---- STEP 1: routing ---------------------------------------------------
     if mode == "forest":
-        d_idx = pairwise(q, forest.index_centers, metric="sq_l2", use_kernel=kernel)  # (Q, I)
-        closest = jnp.argmin(d_idx, axis=1)  # (Q,)
-        sel = jax.nn.one_hot(closest, n_idx, dtype=jnp.float32)
-        nbrs = forest.neighbors[closest]  # (Q, MAXNBR)
-        valid = (nbrs >= 0).astype(jnp.float32)
-        nbr_mask = jnp.sum(
-            jax.nn.one_hot(jnp.clip(nbrs, 0, n_idx - 1), n_idx, dtype=jnp.float32)
-            * valid[..., None],
-            axis=1,
-        )
-        sel = (sel + nbr_mask) > 0.0
+        _, closest = route_points(forest.index_centers, q, kernel=kernel)
+        sel = route_eligibility(closest, forest.neighbors)  # (Q, I)
         route_dists = jnp.full((qn,), n_idx, jnp.int32)
         route_cmps = jnp.full((qn,), n_idx, jnp.int32)
     elif mode == "all":
@@ -157,25 +292,10 @@ def knn_search(
     d_piv = pairwise(q, forest.bucket_pivot, metric="l2", use_kernel=kernel)  # (Q, NB)
     lb = jnp.maximum(d_piv - forest.bucket_radius[None, :], 0.0)
     lb = jnp.where(elig, lb, jnp.inf)
-    order = jnp.argsort(lb, axis=1)  # (Q, NB) ascending
-    lb_sorted = jnp.take_along_axis(lb, order, axis=1)
-
-    n_steps = -(-nb // beam)  # ceil
-    pad = n_steps * beam - nb
-    if pad:
-        order = jnp.pad(order, ((0, 0), (0, pad)))
-        lb_sorted = jnp.pad(lb_sorted, ((0, 0), (0, pad)), constant_values=jnp.inf)
+    order, lb_sorted, n_steps = _sorted_bounds(lb, beam)
 
     # ---- STEP 2b: bounded scan ----------------------------------------------
-    class Carry(NamedTuple):
-        top_d: Array  # (Q, kk) ascending squared dists
-        top_i: Array  # (Q, kk) ids
-        t: Array
-        visits: Array
-        ndist: Array
-        npad: Array
-
-    init = Carry(
+    init = _Carry(
         top_d=jnp.full((qn, kk), jnp.inf),
         top_i=jnp.full((qn, kk), -1, jnp.int32),
         t=jnp.int32(0),
@@ -183,14 +303,6 @@ def knn_search(
         ndist=jnp.zeros((qn,), jnp.int32),
         npad=jnp.zeros((qn,), jnp.int32),
     )
-
-    def active_mask(c: Carry) -> Array:
-        kth = jnp.sqrt(c.top_d[:, -1])  # inf until kk found
-        cur_lb = jax.lax.dynamic_slice_in_dim(lb_sorted, c.t * beam, beam, axis=1)
-        return cur_lb <= kth[:, None]  # (Q, beam)
-
-    def cond(c: Carry) -> Array:
-        return (c.t < n_steps) & jnp.any(active_mask(c))
 
     # real (unpadded) member count per bucket, for the cost instrumentation
     bucket_count = jnp.sum(forest.bucket_mask, axis=1, dtype=jnp.int32)  # (NB,)
@@ -207,35 +319,45 @@ def knn_search(
         )
         scan_step = kref.bucket_scan_topk_ref
 
-    def body(c: Carry) -> Carry:
-        act = active_mask(c)  # (Q, beam)
-        bsel = jax.lax.dynamic_slice_in_dim(order, c.t * beam, beam, axis=1)  # (Q, beam)
-        # fused gather -> squared-L2 -> running top-k merge (one kernel step;
-        # the (Q, beam, C, D) gather never materializes on the kernel path)
-        new_d, new_i = scan_step(
-            q, scan_x, scan_ids, bsel, act, c.top_d, c.top_i, scan_scale
-        )
-        n_members = jnp.where(act, bucket_count[bsel], 0)  # (Q, beam)
-        return Carry(
-            top_d=new_d,
-            top_i=new_i,
-            t=c.t + 1,
-            visits=c.visits + jnp.sum(act, axis=1, dtype=jnp.int32),
-            ndist=c.ndist + jnp.sum(n_members, axis=1, dtype=jnp.int32),
-            npad=c.npad + jnp.sum(act, axis=1, dtype=jnp.int32) * cap,
-        )
+    out = _scan_phase(
+        init, q, order, lb_sorted, n_steps, beam,
+        scan_step, scan_x, scan_ids, scan_scale, bucket_count, cap,
+    )
+    total_steps = out.t
 
-    out = jax.lax.while_loop(cond, body, init)
+    # ---- STEP 2c: delta-bucket scan phase (streaming tail arrays) -----------
+    n_elig_d = jnp.zeros((qn,), jnp.int32)
+    if delta is not None:
+        dcount = jnp.sum(delta.mask, axis=1, dtype=jnp.int32)  # (I,)
+        # one delta bucket per index, owner(b) = b; empty buffers ineligible
+        elig_d = sel & (dcount[None, :] > 0)  # (Q, I)
+        n_elig_d = jnp.sum(elig_d, axis=1, dtype=jnp.int32)
+        d_piv_d = pairwise(q, delta.pivot, metric="l2", use_kernel=kernel)
+        lb_d = jnp.maximum(d_piv_d - delta.radius[None, :], 0.0)
+        lb_d = jnp.where(elig_d, lb_d, jnp.inf)
+        order_d, lb_d_sorted, n_steps_d = _sorted_bounds(lb_d, beam)
+        if kernel:
+            dx, dids, _ = kops.bucket_scan_prepad(delta.x, delta.ids, None)
+            dstep = kops.delta_scan_topk
+        else:
+            dx, dids, dstep = delta.x, delta.ids, kref.bucket_scan_topk_ref
+        out = _scan_phase(
+            out._replace(t=jnp.int32(0)), q, order_d, lb_d_sorted, n_steps_d,
+            beam, dstep, dx, dids, None, dcount, dcap,
+        )
+        total_steps = total_steps + out.t
 
     stats = SearchStats(
         buckets_visited=out.visits,
         distances=out.ndist,
-        bound_distances=route_dists + n_elig,
+        bound_distances=route_dists + n_elig + n_elig_d,
         padded_distances=out.npad,
         comparisons=route_cmps
-        + n_elig  # bound comparisons (only eligible buckets are bounded)
-        + out.visits * jnp.int32(int(np.ceil(np.log2(max(kk, 2)))) * cap),
-        steps=out.t,
+        + n_elig + n_elig_d  # bound comparisons (only eligible buckets)
+        # top-k merge comparisons over every padded lane actually scanned
+        # (npad carries each phase's own bucket capacity)
+        + out.npad * jnp.int32(int(np.ceil(np.log2(max(kk, 2))))),
+        steps=total_steps,
     )
     return jnp.sqrt(out.top_d), out.top_i, stats
 
@@ -257,18 +379,23 @@ def knn_search_host(
     beam: int = 1,
     kernel: bool = True,
     quantize: bool = False,
+    delta: DeltaView | None = None,
 ):
     """Convenience host wrapper returning numpy results + python-int stats.
 
     ``kernel`` selects the kernels/ops dispatch path (see knn_search);
-    ``quantize`` stores bucket members int8 on device (device_forest).
+    ``quantize`` stores bucket members int8 on device (device_forest);
+    ``delta`` scans the streaming delta buckets as a second phase.
     """
     df = device_forest(forest, quantize=quantize)
     d, i, s = knn_search(
-        df, jnp.asarray(q, jnp.float32), k=k, mode=mode, beam=beam, kernel=kernel
+        df, jnp.asarray(q, jnp.float32), k=k, mode=mode, beam=beam, kernel=kernel,
+        delta=delta,
     )
     # Def. 4: |X| <= k  =>  answer set is the whole dataset.
     n_real = int(forest.bucket_mask.sum())
+    if delta is not None:
+        n_real += int(jnp.sum(delta.mask))
     if d.shape[1] > min(k, n_real):
         d = d[:, : min(k, n_real)]
         i = i[:, : min(k, n_real)]

@@ -177,6 +177,17 @@ def overlap_matrix_objects(
     return rates * (1.0 - jnp.eye(c, dtype=rates.dtype))
 
 
+@jax.jit
+def max_neighbor_rate(rates: Array) -> Array:
+    """(I,) worst off-diagonal overlap rate per partition.
+
+    The scalar each partition is judged by — at build time against
+    (xi_min, xi_max) by the decision stage, online against xi_rebuild by the
+    streaming drift monitor (stream/maintenance.OverlapMonitor)."""
+    c = rates.shape[0]
+    return jnp.max(rates * (1.0 - jnp.eye(c, dtype=rates.dtype)), axis=1)
+
+
 def overlap_matrix(
     method: str,
     pivots: Array,

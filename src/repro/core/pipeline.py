@@ -51,6 +51,18 @@ def default_c_max(n: int) -> int:
     return max(4, int(math.sqrt(n)))
 
 
+def default_delta_capacity(n: int) -> int:
+    """Per-index streaming delta-bucket capacity (stream/ingest.py).
+
+    One c_max-sized tail per index keeps the search-time degradation of an
+    un-merged delta bounded by roughly one extra bucket visit per selected
+    index (the delta bucket is the same size as a full leaf), while giving
+    the drift monitor a fill-fraction signal on the same scale the tree
+    itself buckets at.  Floor of 64 so tiny seed sets still buffer usefully.
+    """
+    return max(64, default_c_max(n))
+
+
 def build_index(x, cfg: IndexConfig) -> tuple[ForestArrays, BuildReport]:
     t0 = time.perf_counter()
     x = np.asarray(x, np.float32)

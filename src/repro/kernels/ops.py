@@ -19,6 +19,15 @@ Datastore storage knobs:
   dequantize in-register (4x less HBM traffic than f32 on the scan).
   The forest equivalent is ``core.knn.device_forest(..., quantize=True)``,
   which stores ``bucket_x`` int8 with per-member scales.
+
+Streaming delta buckets (repro.stream): the per-index append buffers are
+scanned by the SAME fused bucket-scan kernel — a delta buffer is just a
+bucket datastore of shape (I, CAP_d, D) with -1-id padding, so
+``bucket_scan_prepad`` + ``bucket_scan_topk`` (alias ``delta_scan_topk``)
+cover the delta phase of ``core.knn.knn_search`` with no new kernel.
+Delta members always scan f32 (``scale=None``) even when the main forest
+is int8-quantized: freshly streamed rows have no quantization pass yet —
+they pick up int8 storage when maintenance absorbs them into the tree.
 """
 from __future__ import annotations
 
@@ -112,6 +121,11 @@ def bucket_scan_topk(
             q, bucket_x, bucket_ids, bsel, act, top_d, top_i, scale, interpret=True
         )
     return ref.bucket_scan_topk_ref(q, bucket_x, bucket_ids, bsel, act, top_d, top_i, scale)
+
+
+# The streaming delta phase dispatches through the identical kernel step —
+# named so call sites (core/knn.py STEP 2c) read as what they scan.
+delta_scan_topk = bucket_scan_topk
 
 
 def quantize_datastore(x: Array) -> tuple[Array, Array]:

@@ -8,7 +8,13 @@ Production behaviors implemented:
 * per-slot positions: one jitted step advances all slots at their own
   position (position-masked attention; see layers.decode_attention);
 * prompt processing via the prefill path, packed into the slot cache;
-* retrieval datastore shared across slots; per-request flag to disable.
+* retrieval datastore shared across slots; per-request flag to disable;
+* mixed query/insert traffic: ``IngestRequest`` streams new (key, token)
+  pairs into the datastore's delta buffers (serve/retrieval.ingest_keys)
+  between decode steps — one engine serves IoT-style read+write load.
+  The datastore is an ARGUMENT of the jitted decode step (not a closure
+  capture): delta shapes are fixed at build, so ingest swaps buffer
+  contents without a single recompile.
 
 Single-host implementation of the multi-host pattern: on a real mesh the
 same engine runs with params/caches sharded exactly as in the dry-run.
@@ -24,7 +30,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.model import Model
-from repro.serve.retrieval import Datastore
+from repro.serve.retrieval import Datastore, ForestDatastore, ingest_keys
 
 PyTree = Any
 
@@ -38,6 +44,23 @@ class Request:
     done: bool = False
     latency_s: float = 0.0
     _t0: float = 0.0  # perf_counter at slot admission (latency accounting)
+
+
+@dataclass
+class IngestRequest:
+    """Insert (key, next-token) pairs into the serving datastore's delta.
+
+    Requires a ForestDatastore built with ``stream_capacity > 0``.
+    ``accepted`` reports how many pairs fit the destination buffers (the
+    rest were capacity-rejected; clients re-submit after maintenance)."""
+
+    rid: int
+    keys: np.ndarray  # (B, Dk) f32
+    values: np.ndarray  # (B,) i32 token ids
+    accepted: int = 0
+    done: bool = False
+    latency_s: float = 0.0
+    error: str = ""  # non-empty when the engine could not ingest at all
 
 
 class ServeEngine:
@@ -61,20 +84,52 @@ class ServeEngine:
         self.slot_req: list[Request | None] = [None] * num_slots
         self.slot_pos = np.zeros(num_slots, np.int32)
         self.queue: list[Request] = []
+        self.ingest_queue: list[IngestRequest] = []
         self._decode = jax.jit(self._decode_step)
         self.steps = 0
 
     # --- jitted single step over all slots -------------------------------
-    def _decode_step(self, params, tokens, cache, pos):
+    # ``datastore`` is a traced argument: ingest swaps in new delta contents
+    # between steps and the same compiled step sees them (shapes are static).
+    def _decode_step(self, params, tokens, cache, pos, datastore):
         logits, cache = self.model.decode_step(
-            params, tokens, cache, pos, datastore=self.datastore
+            params, tokens, cache, pos, datastore=datastore
         )
         nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         return nxt, cache
 
     # --- slot management ---------------------------------------------------
-    def submit(self, req: Request) -> None:
-        self.queue.append(req)
+    def submit(self, req: Request | IngestRequest) -> None:
+        if isinstance(req, IngestRequest):
+            self.ingest_queue.append(req)
+        else:
+            self.queue.append(req)
+
+    def _drain_ingest(self) -> list[IngestRequest]:
+        """Apply queued inserts to the datastore (between decode steps)."""
+        done: list[IngestRequest] = []
+        streamable = (
+            isinstance(self.datastore, ForestDatastore)
+            and self.datastore.delta is not None
+        )
+        while self.ingest_queue:
+            req = self.ingest_queue.pop(0)
+            t0 = time.perf_counter()
+            if not streamable:
+                # fail THIS request, not the whole run loop (in-flight
+                # decode requests must survive a misdirected insert)
+                req.accepted = 0
+                req.error = "datastore does not accept streaming inserts"
+            else:
+                self.datastore, n_acc = ingest_keys(
+                    self.datastore, jnp.asarray(req.keys, jnp.float32),
+                    jnp.asarray(req.values, jnp.int32),
+                )
+                req.accepted = n_acc
+            req.done = True
+            req.latency_s = time.perf_counter() - t0
+            done.append(req)
+        return done
 
     def _fill_slots(self) -> None:
         for slot in range(self.num_slots):
@@ -103,11 +158,14 @@ class ServeEngine:
         return 1 if leaf.ndim >= 2 and leaf.shape[1] == self.num_slots else 0
 
     # --- main loop ----------------------------------------------------------
-    def run(self, *, max_steps: int = 10_000) -> list[Request]:
-        """Process the queue to completion; returns finished requests."""
-        finished: list[Request] = []
+    def run(self, *, max_steps: int = 10_000) -> list[Request | IngestRequest]:
+        """Process the queues to completion; returns finished requests
+        (decode requests and ingest acks, in completion order)."""
+        finished: list[Request | IngestRequest] = []
+        finished.extend(self._drain_ingest())
         while (any(r is not None for r in self.slot_req) or self.queue) \
                 and self.steps < max_steps:
+            finished.extend(self._drain_ingest())
             self._fill_slots()
             live = [s for s in range(self.num_slots) if self.slot_req[s] is not None]
             if not live:
@@ -122,7 +180,7 @@ class ServeEngine:
                 tokens[s, 0] = self.slot_req[s].out_tokens[-1]
             nxt, self.cache = self._decode(
                 self.params, jnp.asarray(tokens), self.cache,
-                jnp.asarray(self.slot_pos),
+                jnp.asarray(self.slot_pos), self.datastore,
             )
             self.steps += 1
             nxt = np.asarray(nxt)

@@ -64,10 +64,23 @@ class ForestDatastore:
     """The paper's overlap-optimized forest as a kNN-LM datastore: queries
     run the pruned masked-bucket scan (core/knn.py) instead of the flat
     shard scan — the fraction of rows touched is the paper's whole point
-    (benchmarks/bench_retrieval.py measures it)."""
+    (benchmarks/bench_retrieval.py measures it).
+
+    ``delta`` (a stream.ingest.DeltaBuffer, present when the datastore was
+    built with ``stream_capacity > 0``) holds streamed (key, token) pairs
+    appended at serve time (engine IngestRequest); the search scans it as
+    the second phase of the same fused bucket scan.  ``n_main`` is the
+    frozen build-time row count; streamed rows take global ids from
+    ``n_main`` upward, indexing the preallocated tail of ``values``.
+    ``next_id`` is the id high-water mark — it lives ON the datastore (not
+    in any engine) so every ingest path shares one id space and an id can
+    never be issued twice or past the values tail."""
 
     forest: Any  # core.knn.DeviceForest
-    values: Array  # (N_objects,) i32, indexed by global object id
+    values: Array  # (N_objects + stream capacity,) i32, by global object id
+    delta: Any = None  # stream.ingest.DeltaBuffer | None
+    n_main: int = 0
+    next_id: int = 0
 
 
 def build_forest_datastore(
@@ -78,11 +91,18 @@ def build_forest_datastore(
     eps: float | None = None,
     min_pts: int = 16,
     quantized: bool = False,
+    stream_capacity: int = 0,
 ) -> ForestDatastore:
     """Build the paper's index over the datastore keys (host-side, like any
     vector store's build path).  ``quantized`` stores bucket members int8
     (device_forest's storage knob) — bounds stay f32, only the member scan
-    dequantizes in-register."""
+    dequantizes in-register.  ``stream_capacity > 0`` preallocates streaming
+    state for up to ``stream_capacity`` TOTAL ingested pairs: a values tail
+    of that length (``ingest_keys`` stops issuing ids at the tail end, so an
+    accepted key can never index past it) and per-index delta buffers sized
+    ``2 * stream_capacity / n_indexes`` (floor 32) — 2x headroom for routing
+    skew without multiplying memory by the index count; a pathologically
+    skewed stream hits the reported capacity-reject path instead."""
     from repro.core import IndexConfig, build_index
     from repro.core.knn import device_forest
 
@@ -95,9 +115,71 @@ def build_forest_datastore(
         eps = 2.0 * float(np.sqrt(np.median(d2.min(axis=1))))
     cfg = IndexConfig(method=method, eps=eps, min_pts=min_pts, dbscan_block=2048)
     forest, _ = build_index(np.asarray(keys, np.float32), cfg)
+    delta = None
+    vals = jnp.asarray(values, jnp.int32)
+    if stream_capacity > 0:
+        from repro.stream.ingest import alloc_delta
+
+        capd = min(stream_capacity, -(-2 * stream_capacity // forest.n_indexes))
+        delta = alloc_delta(forest, max(32, capd))
+        vals = jnp.concatenate(
+            [vals, jnp.zeros((stream_capacity,), jnp.int32)]
+        )
     return ForestDatastore(
         forest=device_forest(forest, quantize=quantized),
-        values=jnp.asarray(values, jnp.int32),
+        values=vals,
+        delta=delta,
+        n_main=len(keys),
+        next_id=len(keys),
+    )
+
+
+def ingest_keys(
+    ds: ForestDatastore, keys: Array, values: Array
+) -> tuple[ForestDatastore, int]:
+    """Stream (key, token) pairs into a forest datastore's delta buffers.
+
+    Routes + appends via stream.ingest (Alg. 2 STEP-1 routing on device),
+    writes token values at the assigned global ids.  Two-phase so the id
+    space never leaks: a PROBE ingest (result discarded) learns which pairs
+    the buffers will accept, then ids from ``ds.next_id`` are issued to
+    exactly those pairs (clamped to the values-tail room) and committed.
+    Ids are therefore only ever consumed by pairs that are actually stored
+    — a capacity-rejected or tail-refused pair burns nothing and can be
+    re-submitted later.  Returns the updated datastore and the number of
+    ACCEPTED pairs (the serving tier reports rejects back to the client
+    rather than blocking the decode loop on a rebuild; the offline
+    StreamingForest wrapper is the no-loss path).
+    """
+    from repro.stream.ingest import ingest
+
+    if ds.delta is None:
+        raise ValueError("datastore built without stream_capacity")
+    next_id = int(ds.next_id)
+    room = ds.values.shape[0] - next_id
+    if room <= 0:
+        return ds, 0
+    keys_j = jnp.asarray(keys, jnp.float32)
+    _, acc = ingest(  # probe: same state + same routing => same acceptance
+        ds.forest, ds.delta, keys_j,
+        jnp.full((keys_j.shape[0],), -1, jnp.int32),
+    )
+    # Dropping rejected rows cannot demote an accepted one: within each
+    # destination run the kept rows' slot ranks only shrink.
+    take = np.flatnonzero(np.asarray(acc))[:room]
+    if take.size == 0:
+        return ds, 0
+    ids = jnp.arange(next_id, next_id + take.size, dtype=jnp.int32)
+    new_delta, _ = ingest(ds.forest, ds.delta, keys_j[take], ids)
+    new_values = ds.values.at[ids].set(
+        jnp.asarray(np.asarray(values)[take], jnp.int32)
+    )
+    return (
+        ForestDatastore(
+            forest=ds.forest, values=new_values, delta=new_delta,
+            n_main=ds.n_main, next_id=next_id + int(take.size),
+        ),
+        int(take.size),
     )
 
 
@@ -108,11 +190,15 @@ def forest_knn(
 
     ``kernel`` selects the kernels/ops dispatch path (fused Pallas bucket
     scan on TPU) vs the pure-jnp reference — see core.knn.knn_search.
+    Streaming deltas, when present, are scanned as the second phase.
     """
     from repro.core.knn import knn_search
+    from repro.stream.ingest import delta_view
 
+    delta = None if ds.delta is None else delta_view(ds.delta)
     d, ids, _ = knn_search(
-        ds.forest, hidden.astype(jnp.float32), k=k, mode="forest", kernel=kernel
+        ds.forest, hidden.astype(jnp.float32), k=k, mode="forest", kernel=kernel,
+        delta=delta,
     )
     vals = ds.values[jnp.clip(ids, 0, ds.values.shape[0] - 1)]
     vals = jnp.where(ids >= 0, vals, 0)

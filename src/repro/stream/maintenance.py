@@ -1,0 +1,421 @@
+"""Overlap-driven online index maintenance — closing the loop the paper
+leaves static.
+
+The paper computes VBM/DBM/OBM overlap rates ONCE, at build time, to decide
+the partition layout (§4.2-4.3).  Under streaming ingest the geometry
+drifts: delta appends shift centroids and inflate radii, so the overlap
+structure the layout was optimized for stops being true.  This module
+re-evaluates the paper's own heuristics (core/overlap.py) on the *updated*
+geometry — exact post-ingest centroids and conservative radius upper bounds
+maintained incrementally by stream/ingest.py — and, past configurable ξ
+thresholds, schedules host-side per-index rebuilds (core/bccf.build_tree)
+that absorb the delta into a fresh tree and are swapped in atomically.
+
+Trigger taxonomy (``DriftReport.reasons``):
+
+  overlap   max_j rate[i, j] >= xi_rebuild — the updated geometry crossed
+            the same kind of threshold the build-time decision stage uses;
+            the index's layout is no longer what the heuristic would choose.
+  drift     rate[i, j] rose by >= drift_margin over the build-time baseline
+            (relative trigger; off unless drift_margin is set).
+  fill      delta buffer fill fraction >= fill_rebuild — search degradation
+            bound (one over-full tail bucket per selected index).
+  overflow  capacity-rejected appends recorded — standing trigger, the
+            rejected points are waiting to be re-ingested.
+
+Rebuilds never drop queries: the new forest is built OFF to the side on the
+host while the old (device forest, delta) pair keeps serving; the swap
+installs the new device arrays, a fresh delta, and re-ingests the surviving
+delta members of untouched indexes in one step (tests assert search is
+exact across the swap boundary).  DIMS's serve-under-redistribution design
+(PAPERS.md) is the pattern; FITing-Tree's buffered inserts bound the cost.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from time import perf_counter
+from typing import Any
+
+import numpy as np
+
+from repro.core.bccf import build_tree
+from repro.core.forest import ForestArrays, swap_trees
+from repro.core.knn import DeviceForest, device_forest, knn_search
+from repro.core.overlap import max_neighbor_rate, overlap_matrix
+from repro.core.pipeline import IndexConfig, build_index, default_delta_capacity
+from repro.stream.ingest import (
+    DeltaBuffer,
+    alloc_delta,
+    delta_view,
+    ingest,
+    pull_delta_meta,
+    updated_geometry,
+)
+
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class MaintenanceConfig:
+    """ξ thresholds and rebuild knobs for the drift monitor."""
+
+    method: str = "dbm"  # vbm | dbm | obm — heuristic re-evaluated online
+    xi_rebuild: float = 0.8  # absolute overlap rate forcing repartition
+    drift_margin: float | None = None  # optional rise-over-baseline trigger
+    fill_rebuild: float = 0.75  # delta fill fraction forcing a merge-rebuild
+    pivot_method: str = "gh"
+    c_max: int | None = None  # default: keep the forest's bucket capacity
+    seed: int = 1
+
+
+@dataclass
+class DriftReport:
+    """One monitor evaluation: updated rates vs baseline + fired triggers."""
+
+    rates_baseline: np.ndarray  # (I, I) build-time overlap rates
+    rates: np.ndarray  # (I, I) rates on the updated geometry
+    centers: np.ndarray  # (I, D) post-ingest centroids
+    radii: np.ndarray  # (I,) conservative radius upper bounds
+    fill: np.ndarray  # (I,) delta fill fraction
+    dropped: np.ndarray  # (I,) capacity-rejected appends
+    triggers: list[int] = field(default_factory=list)
+    reasons: dict[int, list[str]] = field(default_factory=dict)
+
+    @property
+    def should_rebuild(self) -> bool:
+        return bool(self.triggers)
+
+
+def object_assignment(
+    forest: ForestArrays, delta_host: dict[str, np.ndarray] | None, n_total: int
+) -> np.ndarray:
+    """(N,) object id -> owning index, across main buckets and delta tails
+    (the OBM monitor needs a full assignment, Def. 11's denominator)."""
+    assign = np.full(n_total, -1, np.int64)
+    m = forest.bucket_mask
+    assign[forest.bucket_ids[m]] = np.repeat(forest.bucket_index, m.sum(axis=1))
+    if delta_host is not None:
+        for i in range(forest.n_indexes):
+            c = int(delta_host["count"][i])
+            if c:
+                assign[delta_host["ids"][i, :c]] = i
+    return assign
+
+
+def _rates(
+    method: str,
+    centers: np.ndarray,
+    radii: np.ndarray,
+    x: np.ndarray | None,
+    assign: np.ndarray | None,
+) -> np.ndarray:
+    if method == "obm" and (x is None or assign is None):
+        raise ValueError("OBM drift monitoring needs the dataset + assignment")
+    return np.asarray(
+        overlap_matrix(
+            method,
+            jnp.asarray(centers, jnp.float32),
+            jnp.asarray(radii, jnp.float32),
+            x=None if x is None else jnp.asarray(x, jnp.float32),
+            assign=None if assign is None else jnp.asarray(assign),
+        )
+    )
+
+
+class OverlapMonitor:
+    """Re-evaluates the paper's overlap heuristic as the geometry drifts.
+
+    The baseline matrix is captured from the forest's build-time geometry;
+    ``check`` recomputes the same heuristic on the post-ingest geometry
+    (stream/ingest.updated_geometry) and classifies every index against the
+    ξ thresholds.  Cheap by construction: O(I^2) rate math on incrementally
+    maintained sums — no scan of the raw data (except OBM, which is defined
+    over objects and receives them explicitly).
+    """
+
+    def __init__(
+        self,
+        forest: ForestArrays,
+        cfg: MaintenanceConfig,
+        *,
+        x: np.ndarray | None = None,
+    ):
+        self.cfg = cfg
+        self.forest = forest
+        assign = None
+        if cfg.method == "obm":
+            if x is None:
+                raise ValueError("OBM monitor needs the dataset at construction")
+            assign = object_assignment(forest, None, len(x))
+        self.rates_baseline = _rates(
+            cfg.method, forest.index_centers, forest.index_radii, x, assign
+        )
+
+    def check(
+        self, delta: DeltaBuffer, *, x: np.ndarray | None = None
+    ) -> DriftReport:
+        cfg = self.cfg
+        centers_d, radii_d = updated_geometry(delta)
+        centers = np.asarray(centers_d)
+        radii = np.asarray(radii_d)
+        host = pull_delta_meta(delta, ids=cfg.method == "obm")
+        assign = None
+        if cfg.method == "obm":
+            if x is None:
+                raise ValueError("OBM drift check needs the dataset")
+            assign = object_assignment(self.forest, host, len(x))
+        rates = _rates(cfg.method, centers, radii, x, assign)
+
+        capd = delta.capacity
+        fill = host["count"].astype(np.float64) / max(capd, 1)
+        report = DriftReport(
+            rates_baseline=self.rates_baseline,
+            rates=rates,
+            centers=centers,
+            radii=radii,
+            fill=fill,
+            dropped=host["dropped"],
+        )
+        worst = np.asarray(max_neighbor_rate(jnp.asarray(rates)))
+        worst_base = np.asarray(max_neighbor_rate(jnp.asarray(self.rates_baseline)))
+        for i in range(len(radii)):
+            why = []
+            # Fire only on overlap the CURRENT layout doesn't account for:
+            # if the post-rebuild baseline itself sits at/above the rate, a
+            # per-index rebuild cannot reduce it (that pair needs a merge —
+            # the decision stage's job, not maintenance's) and re-firing
+            # would churn rebuilds forever.
+            if worst[i] >= cfg.xi_rebuild and worst[i] > worst_base[i] + 1e-6:
+                why.append("overlap")
+            if cfg.drift_margin is not None and (
+                worst[i] - worst_base[i] >= cfg.drift_margin
+            ):
+                why.append("drift")
+            if fill[i] >= cfg.fill_rebuild:
+                why.append("fill")
+            if host["dropped"][i] > 0:
+                why.append("overflow")
+            if why:
+                report.triggers.append(i)
+                report.reasons[i] = why
+        return report
+
+
+def rebuild_indexes(
+    forest: ForestArrays,
+    delta: DeltaBuffer,
+    x_all: np.ndarray,
+    triggers: list[int],
+    cfg: MaintenanceConfig,
+) -> tuple[ForestArrays, dict[str, Any]]:
+    """Rebuild the triggered indexes' BCCF trees with their delta absorbed.
+
+    Host-side (the build path of any production vector store): per index,
+    gather main members from the (fresh — see swap_trees) host tree copies
+    plus the delta members, run ``core.bccf.build_tree``, recompute exact
+    centroid/radius, and swap everything in via ``forest.swap_trees``.
+    Returns (new ForestArrays, rebuild stats).
+    """
+    host = pull_delta_meta(delta, ids=True)
+    replacements = {}
+    centers = forest.index_centers.copy()
+    radii = forest.index_radii.copy()
+    n_absorbed = 0
+    t0 = perf_counter()
+    for gi in triggers:
+        main_ids = np.concatenate(
+            [np.asarray(m, np.int64) for m in forest.trees[gi].bucket_members]
+        )
+        c = int(host["count"][gi])
+        d_ids = host["ids"][gi, :c].astype(np.int64)
+        members = np.concatenate([main_ids, d_ids])
+        n_absorbed += c
+        pts = x_all[members]
+        replacements[gi] = build_tree(
+            pts,
+            members,
+            c_max=cfg.c_max or forest.c_max,
+            pivot_method=cfg.pivot_method,
+            seed=cfg.seed + gi,
+        )
+        center = pts.mean(axis=0).astype(np.float32)
+        centers[gi] = center
+        radii[gi] = float(np.sqrt(((pts - center) ** 2).sum(-1)).max())
+    new_forest = swap_trees(
+        forest, x_all, replacements, index_centers=centers, index_radii=radii
+    )
+    stats = dict(
+        n_rebuilt=len(triggers),
+        n_absorbed=n_absorbed,
+        rebuild_distances=sum(t.counters.distances for t in replacements.values()),
+        wall_time_s=perf_counter() - t0,
+    )
+    return new_forest, stats
+
+
+class StreamingForest:
+    """Ingest → monitor → rebuild lifecycle owner (single-writer).
+
+    Wraps (host ForestArrays, device DeviceForest, DeltaBuffer, monitor)
+    behind three calls:
+
+      ids = sf.ingest(xb)        # batched insert; NEVER loses a point
+      d, i, s = sf.search(q, k)  # forest + delta, exact within selection
+      report = sf.maintain()     # drift check; rebuild + hot swap if fired
+
+    Atomic swap discipline: queries issued before a swap use the old
+    (device, delta) pair; queries after use the new pair — there is no
+    intermediate state in which either structure is partially updated, so
+    there is no search-correctness gap (tests/test_stream.py asserts
+    exactness immediately before and after a swap).
+    """
+
+    def __init__(
+        self,
+        x0: np.ndarray,
+        index_cfg: IndexConfig | None = None,
+        maint_cfg: MaintenanceConfig | None = None,
+        *,
+        delta_capacity: int | None = None,
+    ):
+        x0 = np.asarray(x0, np.float32)
+        self.index_cfg = index_cfg or IndexConfig()
+        self.maint_cfg = maint_cfg or MaintenanceConfig()
+        self.forest, self.build_report = build_index(x0, self.index_cfg)
+        self.device: DeviceForest = device_forest(self.forest)
+        self.capacity = delta_capacity or default_delta_capacity(len(x0))
+        self.delta: DeltaBuffer = alloc_delta(self.forest, self.capacity)
+        self._x_parts: list[np.ndarray] = [x0]
+        self._x_cache: np.ndarray | None = x0
+        self.n_total = len(x0)
+        self.monitor = OverlapMonitor(
+            self.forest, self.maint_cfg,
+            x=x0 if self.maint_cfg.method == "obm" else None,
+        )
+        self.rebuild_log: list[dict[str, Any]] = []
+
+    # --- dataset bookkeeping ------------------------------------------------
+    @property
+    def x_all(self) -> np.ndarray:
+        if self._x_cache is None or len(self._x_cache) != self.n_total:
+            self._x_cache = np.concatenate(self._x_parts)
+            self._x_parts = [self._x_cache]
+        return self._x_cache
+
+    # --- write path ---------------------------------------------------------
+    def ingest(self, xb: np.ndarray) -> np.ndarray:
+        """Insert a batch; returns the assigned global object ids.
+
+        Chunks the batch to the per-index buffer capacity so a forced
+        maintenance pass (emptying the destination buffers) always makes the
+        retry succeed — ingestion cannot silently drop or livelock.
+        """
+        xb = np.asarray(xb, np.float32)
+        ids = np.arange(self.n_total, self.n_total + len(xb), dtype=np.int64)
+        self._x_parts.append(xb)
+        self.n_total += len(xb)
+        self._x_cache = None
+        for lo in range(0, len(xb), self.capacity):
+            self._ingest_chunk(xb[lo : lo + self.capacity], ids[lo : lo + self.capacity])
+        return ids
+
+    def _ingest_chunk(self, xc: np.ndarray, ic: np.ndarray) -> None:
+        # Termination argument: a round that rejects any point force-rebuilds
+        # every rejecting index, emptying its buffer into the main structure.
+        # A retried point (chunk size <= buffer capacity) can only be
+        # rejected again by re-routing to a DIFFERENT still-full buffer, and
+        # each round empties at least one of those — so at most n_indexes
+        # rounds before every point is accepted.  Retries flip the ``valid``
+        # mask instead of slicing the batch, so every round reuses one
+        # compiled ingest program (shapes never depend on the reject count).
+        xj, ij = jnp.asarray(xc), jnp.asarray(ic)
+        pending = np.ones(len(xc), bool)
+        for _ in range(self.forest.n_indexes + 1):
+            self.delta, acc = ingest(
+                self.device, self.delta, xj, ij, valid=jnp.asarray(pending)
+            )
+            pending &= ~np.asarray(acc)
+            if not pending.any():
+                return
+            # capacity hit: force-rebuild the rejecting indexes, retry rest
+            meta = pull_delta_meta(self.delta)
+            full = [i for i in range(self.forest.n_indexes) if meta["dropped"][i] > 0]
+            self._rebuild(full)
+        raise RuntimeError(
+            "ingest chunk still rejected after rebuilding every full index — "
+            "invariant violation, please report"
+        )
+
+    # --- read path ----------------------------------------------------------
+    def search(self, q, *, k: int, mode: str = "forest", beam: int = 1,
+               kernel: bool = True):
+        """kNN over main forest + delta (core.knn.knn_search two-phase)."""
+        return knn_search(
+            self.device, jnp.asarray(q, jnp.float32), k=k, mode=mode, beam=beam,
+            kernel=kernel, delta=delta_view(self.delta),
+        )
+
+    # --- maintenance --------------------------------------------------------
+    def check(self) -> DriftReport:
+        """Drift evaluation only (no rebuild)."""
+        x = self.x_all if self.maint_cfg.method == "obm" else None
+        return self.monitor.check(self.delta, x=x)
+
+    def maintain(self) -> DriftReport:
+        """Run the monitor; rebuild + hot-swap every triggered index."""
+        report = self.check()
+        if report.triggers:
+            self._rebuild(report.triggers, report)
+        return report
+
+    def _rebuild(self, triggers: list[int], report: DriftReport | None = None) -> None:
+        if not triggers:
+            return
+        x_all = self.x_all
+        new_forest, stats = rebuild_indexes(
+            self.forest, self.delta, x_all, triggers, self.maint_cfg
+        )
+        # Survivors — delta members of indexes NOT rebuilt — keep their
+        # original buffers wholesale: a kept index keeps its center, so the
+        # old buffer's pivot/radius bound is still valid verbatim.  A pure
+        # device-side select (no host round-trip, no re-routing) that BY
+        # CONSTRUCTION cannot overflow: each kept buffer moves into a fresh
+        # buffer of the same capacity.  Rebuilt indexes start empty (their
+        # members were absorbed into the new trees); ``dropped`` resets —
+        # rejected points were never stored and their owners retry them.
+        new_device = device_forest(new_forest)
+        fresh = alloc_delta(new_forest, self.capacity)
+        keep = np.ones(self.forest.n_indexes, bool)
+        keep[list(triggers)] = False
+        n_migrated = int(np.asarray(self.delta.count)[keep].sum())
+        kj = jnp.asarray(keep)
+        old = self.delta
+        new_delta = fresh._replace(
+            x=jnp.where(kj[:, None, None], old.x, fresh.x),
+            ids=jnp.where(kj[:, None], old.ids, fresh.ids),
+            count=jnp.where(kj, old.count, fresh.count),
+            pivot=jnp.where(kj[:, None], old.pivot, fresh.pivot),
+            radius=jnp.where(kj, old.radius, fresh.radius),
+            sum_x=jnp.where(kj[:, None], old.sum_x, fresh.sum_x),
+        )
+
+        # ---- atomic swap: a query sees the old pair or the new pair --------
+        self.forest, self.device, self.delta = new_forest, new_device, new_delta
+        self.monitor = OverlapMonitor(
+            new_forest, self.maint_cfg,
+            x=x_all if self.maint_cfg.method == "obm" else None,
+        )
+        stats["triggers"] = list(triggers)
+        stats["reasons"] = dict(report.reasons) if report is not None else {}
+        stats["n_migrated"] = n_migrated
+        self.rebuild_log.append(stats)
+
+    # --- introspection ------------------------------------------------------
+    def structure(self) -> dict[str, Any]:
+        """aggregate_structure + live delta occupancy (always fresh)."""
+        s = self.forest.aggregate_structure()
+        s["delta_fill"] = np.asarray(self.delta.count).tolist()
+        s["delta_capacity"] = self.capacity
+        s["n_objects"] = self.n_total
+        s["rebuilds"] = self.forest.build_stats.get("rebuilds", 0)
+        return s

@@ -8,8 +8,13 @@ from repro.configs import get_smoke_config
 from repro.configs.base import RetrievalConfig
 from repro.data.synthetic import embedding_datastore
 from repro.models.model import Model
-from repro.serve.engine import Request, ServeEngine
-from repro.serve.retrieval import build_flat_datastore, knn_interpolate, knn_logits
+from repro.serve.engine import IngestRequest, Request, ServeEngine
+from repro.serve.retrieval import (
+    build_flat_datastore,
+    build_forest_datastore,
+    knn_interpolate,
+    knn_logits,
+)
 
 
 @pytest.fixture(scope="module")
@@ -85,6 +90,83 @@ def test_engine_serves_batched_requests(retrieval_cfg, rng):
         assert all(0 <= t < cfg.padded_vocab for t in r.out_tokens)
     # continuous batching actually reused slots (5 reqs > 2 slots)
     assert engine.steps >= 8
+
+
+def test_engine_mixed_query_ingest_traffic(retrieval_cfg, rng):
+    """One engine serves interleaved decode requests and datastore inserts:
+    the IoT read+write pattern.  Ingested pairs must become retrievable by
+    the very same engine (datastore is a traced argument, not a baked-in
+    closure constant)."""
+    cfg = retrieval_cfg
+    model = Model(cfg)
+    params = model.init(jax.random.key(2))
+    keys, values = embedding_datastore(256, cfg.d_model, seed=4)
+    ds = build_forest_datastore(keys, values % cfg.vocab_size, stream_capacity=64)
+    engine = ServeEngine(model, params, num_slots=2, max_len=32, datastore=ds)
+
+    new_keys = (-keys[:12] + 40.0).astype(np.float32)  # far from main keys
+    new_vals = np.full(12, 9, np.int32)
+    for rid in range(4):
+        engine.submit(Request(
+            rid=rid, prompt=rng.integers(0, cfg.vocab_size, 6).astype(np.int32),
+            max_new_tokens=4))
+        engine.submit(IngestRequest(
+            rid=100 + rid, keys=new_keys[rid * 3:(rid + 1) * 3],
+            values=new_vals[rid * 3:(rid + 1) * 3]))
+    finished = engine.run()
+
+    decodes = [r for r in finished if isinstance(r, Request)]
+    ingests = [r for r in finished if isinstance(r, IngestRequest)]
+    assert len(decodes) == 4 and len(ingests) == 4
+    assert all(r.done for r in ingests)
+    assert sum(r.accepted for r in ingests) == 12
+    assert int(np.asarray(engine.datastore.delta.count).sum()) == 12
+    for r in decodes:
+        assert len(r.out_tokens) >= 4
+        assert all(0 <= t < cfg.padded_vocab for t in r.out_tokens)
+    # the streamed pairs are live in the SAME engine's retrieval path
+    p = knn_logits(jnp.asarray(new_keys[:4]), engine.datastore, cfg)
+    assert (np.asarray(jnp.argmax(p, -1)) == 9).all()
+
+
+def test_engine_fails_single_ingest_not_the_run_loop(rng):
+    """An IngestRequest against a non-streaming datastore fails with an
+    error ack; in-flight decode requests still complete."""
+    cfg = get_smoke_config("smollm-135m")
+    model = Model(cfg)
+    params = model.init(jax.random.key(3))
+    engine = ServeEngine(model, params, num_slots=1, max_len=24)  # no datastore
+    engine.submit(Request(rid=0, prompt=rng.integers(0, cfg.vocab_size, 4)
+                          .astype(np.int32), max_new_tokens=3))
+    engine.submit(IngestRequest(rid=1, keys=np.zeros((2, 4), np.float32),
+                                values=np.zeros(2, np.int32)))
+    finished = engine.run()
+    ing = next(r for r in finished if isinstance(r, IngestRequest))
+    dec = next(r for r in finished if isinstance(r, Request))
+    assert ing.done and ing.accepted == 0 and ing.error
+    assert len(dec.out_tokens) >= 3
+
+
+def test_ingest_keys_never_outruns_values_tail(retrieval_cfg):
+    """Regression: ids are issued from the datastore's own high-water mark
+    and stop at the preallocated tail, so an accepted streamed key can never
+    read a clipped/foreign token value."""
+    from repro.serve.retrieval import ingest_keys
+
+    cfg = retrieval_cfg
+    keys, values = embedding_datastore(256, cfg.d_model, seed=6)
+    ds = build_forest_datastore(keys, values % cfg.vocab_size, stream_capacity=8)
+    g = np.random.default_rng(8)
+    new_keys = (-keys[:16] + 40.0).astype(np.float32)
+    new_vals = (np.arange(16) + 100).astype(np.int32)
+    ds, acc1 = ingest_keys(ds, new_keys, new_vals)
+    assert acc1 == 8  # tail exhausted exactly at stream_capacity
+    ds, acc2 = ingest_keys(ds, new_keys[8:], new_vals[8:])
+    assert acc2 == 0  # refused up front, nothing corrupted
+    assert int(ds.next_id) == ds.n_main + 8
+    # every accepted key retrieves ITS token, not a clipped neighbor's
+    p = knn_logits(jnp.asarray(new_keys[:8]), ds, cfg)
+    np.testing.assert_array_equal(np.asarray(jnp.argmax(p, -1)), new_vals[:8])
 
 
 def test_engine_greedy_matches_manual_decode(rng):
