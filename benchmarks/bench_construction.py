@@ -10,15 +10,21 @@ from __future__ import annotations
 
 import time
 
-from benchmarks.common import METHODS, emit, index_config, load_datasets
-from repro.core import build_baseline, build_index
+from benchmarks.common import (
+    METHODS,
+    baseline_config,
+    emit,
+    facade_config,
+    load_datasets,
+)
+from repro.api import OverlapIndex
 
 
 def run(full: bool = False, out: dict | None = None) -> None:
     for ds in load_datasets(full):
         for method in METHODS:
             t0 = time.perf_counter()
-            forest, rep = build_index(ds.x, index_config(ds, method))
+            rep = OverlapIndex.build(ds.x, facade_config(ds, method)).build_report
             dt = time.perf_counter() - t0
             derived = (
                 f"dataset={ds.name};method={method};"
@@ -30,7 +36,7 @@ def run(full: bool = False, out: dict | None = None) -> None:
             if out is not None:
                 out[f"{ds.name}/{method}"] = rep.__dict__ | {"detail": None}
         t0 = time.perf_counter()
-        bf, brep = build_baseline(ds.x, index_config(ds, "vbm"))
+        brep = OverlapIndex.baseline(ds.x, baseline_config(ds)).build_report
         dt = time.perf_counter() - t0
         emit(
             f"construction/{ds.name}/bccf-baseline", dt * 1e6,

@@ -9,7 +9,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import Timer, emit
-from repro.core import IndexConfig, build_index, knn_search_host
+from repro.api import Config, IndexConfig, OverlapIndex
 from repro.data.synthetic import embedding_datastore
 from repro.kernels import ops as kops
 
@@ -43,20 +43,22 @@ def run(full: bool = False, out: dict | None = None) -> None:
     emit("retrieval/int8", t.s * 1e6 / n_q,
          f"n={n};dim={dim};k={k};agree_vs_f32={agree:.3f};bytes_ratio=0.25")
 
-    # paper's forest index (pruned scan)
-    cfg = IndexConfig(method="vbm", eps=3.5, min_pts=8, xi_min=0.4, xi_max=0.8,
-                      dbscan_block=2048)
-    forest, rep = build_index(keys, cfg)
-    knn_search_host(forest, q[:2], k=k)
+    # paper's forest index (pruned scan) through the facade
+    cfg = Config(index=IndexConfig(
+        method="vbm", eps=3.5, min_pts=8, xi_min=0.4, xi_max=0.8,
+        dbscan_block=2048,
+    ))
+    ix = OverlapIndex.build(keys, cfg)
+    ix.search(q, k=k, mode="forest")  # warm the plan
     with Timer() as t:
-        d_f, i_f, stats = knn_search_host(forest, q, k=k, mode="forest")
+        res = ix.search(q, k=k, mode="forest")
     recall = float(np.mean([
-        len(set(i_f[i].tolist()) & set(np.asarray(i_flat)[i].tolist())) / k
+        len(set(res.ids[i].tolist()) & set(np.asarray(i_flat)[i].tolist())) / k
         for i in range(n_q)]))
-    frac = float(stats["distances"].mean()) / n
+    frac = float(res.stats["distances"].mean()) / n
     emit("retrieval/forest-vbm", t.s * 1e6 / n_q,
-         f"n={n};k={k};indexes={rep.n_indexes};dist_frac={frac:.4f};"
-         f"recall_vs_exact={recall:.3f}")
+         f"n={n};k={k};indexes={ix.build_report.n_indexes};"
+         f"dist_frac={frac:.4f};recall_vs_exact={recall:.3f}")
     if out is not None:
         out["forest_dist_frac"] = frac
         out["forest_recall"] = recall

@@ -1,6 +1,15 @@
 """Search efficiency (paper Fig. 21): average distance computations,
 comparisons and wall time for 100 kNN queries at k in {5,10,15,20,50,100},
-per heuristic vs the BCCF baseline, plus recall@k vs exact brute force."""
+per heuristic vs the BCCF baseline, plus recall@k vs exact brute force.
+
+Runs through the ``repro.api.OverlapIndex`` facade — one index object per
+(dataset, method), one cached SearchPlan per (k, mode); the warm pass and
+the timed pass hit the same compiled executor.
+
+``--smoke`` shrinks datasets and the k sweep for CI; the artifact
+(BENCH_search.json) is written either way so the perf trajectory stays
+diffable across commits.
+"""
 from __future__ import annotations
 
 import time
@@ -10,15 +19,18 @@ import numpy as np
 
 from benchmarks.common import (
     METHODS,
+    baseline_config,
     emit,
-    index_config,
+    facade_config,
     load_datasets,
     record,
     write_artifact,
 )
-from repro.core import build_baseline, build_index, knn_exact, knn_search_host
+from repro.api import OverlapIndex
+from repro.core import knn_exact
 
 K_VALUES = (5, 10, 15, 20, 50, 100)
+K_VALUES_SMOKE = (5, 20)
 N_QUERIES = 100
 
 
@@ -28,15 +40,12 @@ def _queries(x: np.ndarray, n: int, seed: int = 7) -> np.ndarray:
     return (x[idx] + 0.05 * x.std() * g.normal(size=(n, x.shape[1]))).astype(np.float32)
 
 
-def _run_one(forest, q, k, mode, kernel=True, quantize=False):
-    # warm compile
-    knn_search_host(forest, q[:2], k=k, mode=mode, kernel=kernel, quantize=quantize)
+def _run_one(ix: OverlapIndex, q, k, mode):
+    ix.search(q, k=k, mode=mode)  # warm: plan + shape specialization
     t0 = time.perf_counter()
-    d, ids, stats = knn_search_host(
-        forest, q, k=k, mode=mode, kernel=kernel, quantize=quantize
-    )
+    res = ix.search(q, k=k, mode=mode)
     dt = time.perf_counter() - t0
-    return d, ids, stats, dt
+    return res, dt
 
 
 def run(
@@ -45,25 +54,33 @@ def run(
     *,
     kernel: bool = True,
     quantize: bool = False,
+    smoke: bool = False,
 ) -> None:
     """``kernel`` routes all search distances through the kernels/ops
     dispatch layer (fused Pallas bucket scan on TPU); ``quantize`` stores
     bucket members int8 on device.  Recall is reported either way, so the
     kernelized path's exactness (mode='all' vs brute force) is visible."""
-    for ds in load_datasets(full):
+    k_values = K_VALUES_SMOKE if smoke else K_VALUES
+    for ds in load_datasets(full, smoke=smoke):
         q = _queries(ds.x, N_QUERIES)
-        de, ie = knn_exact(jnp.asarray(ds.x), jnp.asarray(q), k=max(K_VALUES))
+        de, ie = knn_exact(jnp.asarray(ds.x), jnp.asarray(q), k=max(k_values))
         ie = np.asarray(ie)
-        forests = {}
-        for method in METHODS:
-            forests[method], _ = build_index(ds.x, index_config(ds, method))
-        forests["bccf"], _ = build_baseline(ds.x, index_config(ds, "vbm"))
-        for method, forest in forests.items():
+        indexes = {
+            method: OverlapIndex.build(
+                ds.x, facade_config(ds, method, kernel=kernel, quantize=quantize)
+            )
+            for method in METHODS
+        }
+        indexes["bccf"] = OverlapIndex.baseline(
+            ds.x, baseline_config(ds, kernel=kernel, quantize=quantize)
+        )
+        for method, ix in indexes.items():
             mode = "all" if method == "bccf" else "forest"
-            for k in K_VALUES:
-                d, ids, stats, dt = _run_one(forest, q, k, mode, kernel, quantize)
+            for k in k_values:
+                res, dt = _run_one(ix, q, k, mode)
+                stats = res.stats
                 recall = float(np.mean([
-                    len(set(ids[i].tolist()) & set(ie[i, :k].tolist())) / k
+                    len(set(res.ids[i].tolist()) & set(ie[i, :k].tolist())) / k
                     for i in range(len(q))
                 ]))
                 derived = (
@@ -92,7 +109,11 @@ def run(
                         "recall": recall,
                         "ms_per_query": dt * 1e3 / len(q),
                     }
-    write_artifact("search", meta=dict(full=full, kernel=kernel, quantize=quantize))
+            emit(f"search/{ds.name}/{method}/plans", 0.0,
+                 f"plan_cache={ix.plans.stats()}")
+    write_artifact("search", meta=dict(
+        full=full, smoke=smoke, kernel=kernel, quantize=quantize,
+    ))
 
 
 if __name__ == "__main__":
@@ -100,9 +121,10 @@ if __name__ == "__main__":
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--smoke", action="store_true", help="CI-sized run")
     ap.add_argument("--no-kernel", action="store_true",
                     help="bypass kernels/ops dispatch (pure-jnp reference path)")
     ap.add_argument("--quantize", action="store_true",
                     help="int8 bucket member storage (device_forest knob)")
     a = ap.parse_args()
-    run(full=a.full, kernel=not a.no_kernel, quantize=a.quantize)
+    run(full=a.full, kernel=not a.no_kernel, quantize=a.quantize, smoke=a.smoke)

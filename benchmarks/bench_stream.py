@@ -26,8 +26,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import Timer, emit, record, write_artifact
-from repro.core import IndexConfig, knn_exact
-from repro.stream import MaintenanceConfig, StreamingForest
+from repro.api import Config, IndexConfig, OverlapIndex, StreamConfig
+from repro.core import knn_exact
 
 K = 10
 N_QUERIES = 64
@@ -63,11 +63,10 @@ def _drifting_batches(
     return out
 
 
-def _search_ms(sf: StreamingForest, q: np.ndarray, *, mode: str) -> float:
-    sf.search(q[:2], k=K, mode=mode)  # warm compile for this delta shape
+def _search_ms(sf: OverlapIndex, q: np.ndarray, *, mode: str) -> float:
+    sf.search(q, k=K, mode=mode)  # warm: plan + shape specialization
     t0 = time.perf_counter()
-    d, i, s = sf.search(q, k=K, mode=mode)
-    jnp.asarray(d).block_until_ready()
+    d, i, s = sf.search(q, k=K, mode=mode)  # SearchResult unpacks (host sync)
     return (time.perf_counter() - t0) * 1e3 / len(q)
 
 
@@ -81,17 +80,19 @@ def run(smoke: bool = False) -> None:
     x0 = np.concatenate(_drifting_batches(n_seed, n_seed, dim, seed=3))
 
     with Timer() as t_build:
-        sf = StreamingForest(
-            x0,
-            IndexConfig(method="vbm", eps=2.5, min_pts=8),
-            MaintenanceConfig(method="dbm", xi_rebuild=0.6, fill_rebuild=0.7),
-            delta_capacity=capacity,
-        )
+        sf = OverlapIndex.build(x0, Config(
+            index=IndexConfig(method="vbm", eps=2.5, min_pts=8),
+            stream=StreamConfig(
+                capacity=capacity, monitor_method="dbm",
+                xi_rebuild=0.6, fill_rebuild=0.7,
+            ),
+        ))
     emit("stream/build", t_build.s * 1e6,
          f"n={n_seed};indexes={sf.forest.n_indexes};buckets={sf.forest.n_buckets}")
     record("stream", "build", n_seed=n_seed, indexes=sf.forest.n_indexes,
            buckets=sf.forest.n_buckets, wall_s=t_build.s)
 
+    sf.check()  # allocate the (empty) delta so the baseline includes its scan
     q = _queries(x0, N_QUERIES)
     base_ms = _search_ms(sf, q, mode="forest")
     emit("stream/search_empty_delta", base_ms * 1e3, f"k={K};delta_fill=0")

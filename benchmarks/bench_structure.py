@@ -8,17 +8,17 @@ import time
 
 import numpy as np
 
-from benchmarks.common import METHODS, emit, index_config, load_datasets
-from repro.core import build_index
+from benchmarks.common import METHODS, emit, facade_config, load_datasets
+from repro.api import OverlapIndex
 
 
 def run(full: bool = False, out: dict | None = None) -> None:
     for ds in load_datasets(full):
         for method in METHODS:
             t0 = time.perf_counter()
-            forest, report = build_index(ds.x, index_config(ds, method))
+            ix = OverlapIndex.build(ds.x, facade_config(ds, method))
             dt = time.perf_counter() - t0
-            s = report.detail["structure"]
+            s = ix.build_report.detail["structure"]
             buckets = [b for t in s["trees"] for b in t["bucket_sizes"]]
             levels: dict[int, int] = {}
             for t in s["trees"]:

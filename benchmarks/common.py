@@ -12,7 +12,7 @@ import numpy as np
 
 sys.path.insert(0, "src")  # allow `python -m benchmarks.run` without install
 
-from repro.core import IndexConfig  # noqa: E402
+from repro.api import Config, IndexConfig, SearchConfig  # noqa: E402
 from repro.data.synthetic import tracking_like, ward_like  # noqa: E402
 
 METHODS = ("dbm", "obm", "vbm")
@@ -29,14 +29,17 @@ class BenchDataset:
     c_max: int
 
 
-def load_datasets(full: bool = False) -> list[BenchDataset]:
-    """Paper Table 1 datasets (synthetic stand-ins; --full = paper sizes).
+def load_datasets(full: bool = False, smoke: bool = False) -> list[BenchDataset]:
+    """Paper Table 1 datasets (synthetic stand-ins; --full = paper sizes,
+    ``smoke`` = CI sizes that keep every code path but finish in seconds).
 
     eps / MinPts are re-derived for the synthetic generators with the same
     procedure the paper implies (k-dist elbow); the paper's absolute values
     (eps=248 / 91) are tied to its private data scales.
     """
-    if full:
+    if smoke:
+        n_track, n_ward = 3_000, 6_000
+    elif full:
         n_track, n_ward = 62_702, 1_000_000
     else:
         n_track, n_ward = 12_000, 40_000
@@ -54,6 +57,22 @@ def index_config(ds: BenchDataset, method: str) -> IndexConfig:
     return IndexConfig(
         method=method, xi_min=ds.xi_min, xi_max=ds.xi_max,
         eps=ds.eps, min_pts=ds.min_pts, c_max=ds.c_max,
+    )
+
+
+def facade_config(ds: BenchDataset, method: str, **search) -> Config:
+    """Full Config tree for OverlapIndex.build over a bench dataset."""
+    return Config(index=index_config(ds, method), search=SearchConfig(**search))
+
+
+def baseline_config(ds: BenchDataset, **search) -> Config:
+    """BCCF baseline config: documented 'kmeans' pivot semantics, explicit
+    so the honored-pivot warning never fires in benchmarks."""
+    import dataclasses
+
+    return Config(
+        index=dataclasses.replace(index_config(ds, "vbm"), pivot_method="kmeans"),
+        search=SearchConfig(**search),
     )
 
 

@@ -1,5 +1,6 @@
 """End-to-end IoT streaming demo: continuous ingest + overlap-driven online
-index maintenance (src/repro/stream/).
+index maintenance, through the ``repro.api.OverlapIndex`` facade
+(src/repro/stream/ is the engine room underneath).
 
 A 10k-object forest is built once (the paper's static pipeline), then an
 IoT-style stream arrives in batches — in-distribution sensor readings plus a
@@ -27,8 +28,8 @@ import time
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import IndexConfig, knn_exact
-from repro.stream import MaintenanceConfig, StreamingForest
+from repro.api import Config, IndexConfig, OverlapIndex, StreamConfig
+from repro.core import knn_exact
 
 N_SEED = 10_000
 N_STREAM = 10_240
@@ -60,30 +61,31 @@ def stream_batches(g: np.random.Generator, centers: np.ndarray) -> list[np.ndarr
     return batches
 
 
-def check_exact(sf: StreamingForest, g: np.random.Generator, tag: str) -> None:
+def check_exact(sf: OverlapIndex, g: np.random.Generator, tag: str) -> None:
     x_all = sf.x_all
     qi = g.choice(sf.n_total, 32, replace=False)
     q = (x_all[qi] + 0.05 * g.normal(size=(32, DIM))).astype(np.float32)
-    d, ids, stats = sf.search(q, k=K, mode="all")
+    res = sf.search(q, k=K, mode="all")
     de, _ = knn_exact(jnp.asarray(x_all), jnp.asarray(q), k=K)
     # Both paths use the f32 ||q||^2+||x||^2-2qx expansion but reassociate
     # differently (bucketed vs flat scan): ~5e-3 at these coordinate scales.
     np.testing.assert_allclose(
-        np.asarray(d), np.asarray(de), rtol=5e-3, atol=5e-3)
+        res.dists, np.asarray(de), rtol=5e-3, atol=5e-3)
     print(f"  [{tag}] exact over {sf.n_total} objects "
-          f"(mean buckets visited {np.asarray(stats.buckets_visited).mean():.1f})")
+          f"(mean buckets visited {res.stats['buckets_visited'].mean():.1f})")
 
 
 def main() -> None:
     g = np.random.default_rng(42)
     x0, centers = seed_data(g)
     t0 = time.perf_counter()
-    sf = StreamingForest(
-        x0,
-        IndexConfig(method="vbm", eps=2.5, min_pts=8),
-        MaintenanceConfig(method="dbm", xi_rebuild=0.55, fill_rebuild=0.8),
-        delta_capacity=1024,
-    )
+    sf = OverlapIndex.build(x0, Config(
+        index=IndexConfig(method="vbm", eps=2.5, min_pts=8),
+        stream=StreamConfig(
+            capacity=1024, monitor_method="dbm",
+            xi_rebuild=0.55, fill_rebuild=0.8,
+        ),
+    ))
     print(f"seed forest: {sf.forest.n_indexes} indexes, {sf.forest.n_buckets} "
           f"buckets over {N_SEED} objects ({time.perf_counter() - t0:.1f}s build)")
 
@@ -92,8 +94,8 @@ def main() -> None:
         sf.ingest(xb)
         # queries keep flowing against forest+delta between maintenance
         q = (xb[:16] + 0.05 * g.normal(size=(16, DIM))).astype(np.float32)
-        d, ids, _ = sf.search(q, k=K, mode="forest")
-        assert (np.asarray(ids)[:, 0] >= 0).all()
+        res = sf.search(q, k=K, mode="forest")
+        assert (res.ids[:, 0] >= 0).all()
 
         report = sf.check()
         if report.should_rebuild:

@@ -1,6 +1,7 @@
 """Quickstart: build the paper's overlap-optimized index over synthetic IoT
-data, run kNN queries with all three heuristics, compare against the BCCF
-baseline and exact brute force.
+data through the ``OverlapIndex`` facade, run kNN queries with all three
+heuristics, compare against the BCCF baseline and exact brute force, and
+round-trip the index through save/load.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -8,16 +9,14 @@ import sys
 
 sys.path.insert(0, "src")
 
+import os
+import tempfile
+
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (
-    IndexConfig,
-    build_baseline,
-    build_index,
-    knn_exact,
-    knn_search_host,
-)
+from repro.api import Config, IndexConfig, OverlapIndex
+from repro.core import knn_exact
 from repro.data.synthetic import tracking_like
 
 
@@ -30,27 +29,39 @@ def main() -> None:
     d_exact, i_exact = knn_exact(jnp.asarray(x), jnp.asarray(q), k=10)
     i_exact = np.asarray(i_exact)
 
+    ix = None
     for method in ("vbm", "dbm", "obm"):
-        cfg = IndexConfig(method=method, eps=6.0, min_pts=16, xi_min=0.4, xi_max=0.8)
-        forest, report = build_index(x, cfg)
-        d, ids, stats = knn_search_host(forest, q, k=10)
+        cfg = Config(index=IndexConfig(
+            method=method, eps=6.0, min_pts=16, xi_min=0.4, xi_max=0.8))
+        ix = OverlapIndex.build(x, cfg)
+        res = ix.search(q, k=10)
         recall = np.mean([
-            len(set(ids[i].tolist()) & set(i_exact[i].tolist())) / 10
+            len(set(res.ids[i].tolist()) & set(i_exact[i].tolist())) / 10
             for i in range(len(q))
         ])
+        rep = ix.build_report
         print(
-            f"{method.upper()}: {report.n_indexes} indexes "
-            f"({report.n_overlap_indexes} overlap), build dists "
-            f"{report.tree_distances:,}, search dists/query "
-            f"{stats['distances'].mean():.0f}, recall@10 {recall:.3f}"
+            f"{method.upper()}: {rep.n_indexes} indexes "
+            f"({rep.n_overlap_indexes} overlap), build dists "
+            f"{rep.tree_distances:,}, search dists/query "
+            f"{res.stats['distances'].mean():.0f}, recall@10 {recall:.3f}"
         )
 
-    baseline, brep = build_baseline(x)
-    d, ids, stats = knn_search_host(baseline, q, k=10, mode="all")
+    baseline = OverlapIndex.baseline(x)  # documented BCCF 2-means baseline
+    res = baseline.search(q, k=10, mode="all")
     print(
-        f"BCCF baseline: build dists {brep.tree_distances:,}, "
-        f"search dists/query {stats['distances'].mean():.0f}, recall@10 1.000"
+        f"BCCF baseline: build dists {baseline.build_report.tree_distances:,}, "
+        f"search dists/query {res.stats['distances'].mean():.0f}, recall@10 1.000"
     )
+
+    # persistence: a loaded index answers bitwise-identically, no rebuild
+    want = ix.search(q, k=10)
+    with tempfile.TemporaryDirectory() as tmp:
+        path = ix.save(os.path.join(tmp, "index.npz"))
+        got = OverlapIndex.load(path).search(q, k=10)
+    assert np.array_equal(want.dists, got.dists)
+    assert np.array_equal(want.ids, got.ids)
+    print(f"save/load round-trip: bitwise-identical search after restart ({ix})")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,445 @@
+"""``OverlapIndex`` — the one owner object for the paper's whole pipeline.
+
+DBSCAN -> overlap estimation (registry heuristics) -> decision -> BCCF
+forest -> routed kNN search -> streaming ingest -> overlap-driven online
+maintenance -> persistence -> serving datastore, behind one facade:
+
+    from repro.api import Config, IndexConfig, OverlapIndex
+
+    ix = OverlapIndex.build(x, Config(index=IndexConfig(method="vbm", eps=2.0)))
+    res = ix.search(q, k=10)          # SearchResult: dists / ids / stats
+    ix.ingest(batch)                  # streaming writes (delta buffers)
+    ix.maintain()                     # overlap-drift monitor + hot rebuilds
+    ix.save("index.npz")              # rebuild-free restart ...
+    ix2 = OverlapIndex.load("index.npz")  # ... bitwise-identical searches
+    ds = ix.to_datastore(values)      # kNN-LM serving datastore
+
+Internally the facade owns: the host ``ForestArrays`` (+ fresh tree
+copies), the device ``DeviceForest`` upload (quantized per config), the
+streaming ``DeltaBuffer`` (allocated lazily on first ingest), the overlap
+drift monitor, and a ``PlanCache`` of compiled search executors — repeated
+searches with stable options/shapes never re-trace.
+
+Everything that used to be wired by hand across ``build_index`` /
+``knn_search`` / ``StreamingForest`` / ``ForestDatastore`` hangs off this
+object; those surfaces remain as deprecation shims.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api import persist
+from repro.api.config import (
+    SEARCH_MODES,
+    Config,
+    ConfigError,
+    IndexConfig,
+    as_index_config,
+)
+from repro.api.plan import PlanCache, PlanKey, SearchResult, stats_to_host
+from repro.core.forest import ForestArrays
+from repro.core.knn import DeviceForest, SearchStats, device_forest
+from repro.core.overlap import get_overlap_method
+from repro.core.pipeline import (
+    BuildReport,
+    IndexConfig as _LegacyIndexConfig,
+    build_baseline_core,
+    build_index_core,
+    default_delta_capacity,
+)
+from repro.stream.ingest import (
+    DeltaBuffer,
+    alloc_delta,
+    delta_view,
+    ingest,
+    pull_delta_meta,
+)
+
+
+def _as_config(cfg: Config | _LegacyIndexConfig | None) -> Config:
+    if cfg is None:
+        return Config()
+    if isinstance(cfg, Config):
+        return cfg
+    if isinstance(cfg, _LegacyIndexConfig):  # incl. the validated subclass
+        return Config(index=as_index_config(cfg))
+    raise ConfigError(
+        f"expected a repro.api.Config (or an IndexConfig for the index node), "
+        f"got {type(cfg).__name__}"
+    )
+
+
+def _check_data(x) -> np.ndarray:
+    x = np.asarray(x, np.float32)
+    if x.ndim != 2 or len(x) == 0:
+        raise ConfigError(
+            f"dataset must be a non-empty (N, D) array, got shape {x.shape}"
+        )
+    return x
+
+
+class OverlapIndex:
+    """Lifecycle owner for one overlap-optimized forest (see module doc)."""
+
+    # -- construction --------------------------------------------------------
+    def __init__(self, *args, **kwargs):
+        raise TypeError(
+            "OverlapIndex is constructed via OverlapIndex.build(x, cfg), "
+            ".baseline(x, cfg), or .load(path)"
+        )
+
+    @classmethod
+    def _wire(
+        cls,
+        x: np.ndarray,
+        forest: ForestArrays,
+        cfg: Config,
+        report: BuildReport,
+        *,
+        n_total: int | None = None,
+        delta: DeltaBuffer | None = None,
+        capacity: int | None = None,
+        rebuild_log: list[dict[str, Any]] | None = None,
+        monitor_baseline: np.ndarray | None = None,
+    ) -> "OverlapIndex":
+        self = object.__new__(cls)
+        self.cfg = cfg
+        self.forest = forest
+        self.build_report = report
+        self._x_parts: list[np.ndarray] = [x]
+        self._x_cache: np.ndarray | None = x
+        self.n_total = len(x) if n_total is None else n_total
+        self._device: DeviceForest | None = None  # lazy (see .device)
+        self.capacity = (
+            capacity
+            or cfg.stream.capacity
+            or default_delta_capacity(self.n_total)
+        )
+        self.delta: DeltaBuffer | None = delta
+        self.monitor = None
+        if delta is not None:
+            self.monitor = self._make_monitor()
+            if monitor_baseline is not None:
+                # restore the baseline captured at save time: recomputing it
+                # over the restart-time dataset would shift object-based
+                # trigger decisions mid-stream
+                self.monitor.rates_baseline = np.asarray(monitor_baseline)
+        self.plans = PlanCache()
+        self.rebuild_log: list[dict[str, Any]] = rebuild_log or []
+        return self
+
+    @classmethod
+    def build(
+        cls, x, cfg: Config | _LegacyIndexConfig | None = None
+    ) -> "OverlapIndex":
+        """The paper's proposed pipeline (§4): overlap-optimized forest."""
+        cfg = _as_config(cfg)
+        x = _check_data(x)
+        forest, report = build_index_core(x, cfg.index)
+        return cls._wire(x, forest, cfg, report)
+
+    @classmethod
+    def baseline(
+        cls, x, cfg: Config | _LegacyIndexConfig | None = None
+    ) -> "OverlapIndex":
+        """The BCCF-tree baseline: one tree over all data.  With no config
+        this builds the paper's documented 2-means baseline; an explicit
+        config is honored (see ``build_baseline_core``)."""
+        x = _check_data(x)
+        if cfg is None:
+            forest, report = build_baseline_core(x, None)
+            cfg = Config(index=as_index_config(report.config))
+        else:
+            cfg = _as_config(cfg)
+            forest, report = build_baseline_core(x, cfg.index)
+        return cls._wire(x, forest, cfg, report)
+
+    # -- dataset bookkeeping -------------------------------------------------
+    @property
+    def x_all(self) -> np.ndarray:
+        if self._x_cache is None or len(self._x_cache) != self.n_total:
+            self._x_cache = np.concatenate(self._x_parts)
+            self._x_parts = [self._x_cache]
+        return self._x_cache
+
+    @property
+    def n_indexes(self) -> int:
+        return self.forest.n_indexes
+
+    @property
+    def device(self) -> DeviceForest:
+        """Device upload of the forest, quantized per ``cfg.search``.
+
+        Lazy: host-only consumers (build reports, structure rollups, the
+        construction benchmarks) never pay the upload — and build wall time
+        measures the build, not the transfer.  First search/ingest uploads.
+        """
+        if self._device is None:
+            self._device = device_forest(
+                self.forest, quantize=self.cfg.search.quantize
+            )
+        return self._device
+
+    # -- read path: planner + cached executors -------------------------------
+    def _plan_key(self, k, mode, beam, kernel) -> PlanKey:
+        # per-call overrides get the SAME validation the config tree does —
+        # a bad k/beam/mode must fail here with an actionable error, not
+        # deep inside the jitted executor (and never poison the plan cache)
+        sc = self.cfg.search
+        key = PlanKey(
+            k=sc.k if k is None else int(k),
+            mode=sc.mode if mode is None else mode,
+            beam=sc.beam if beam is None else int(beam),
+            kernel=sc.kernel if kernel is None else bool(kernel),
+            quantize=sc.quantize,
+            delta_capacity=None if self.delta is None else self.capacity,
+        )
+        if key.k < 1:
+            raise ConfigError(f"search k={key.k} must be >= 1 neighbors")
+        if key.mode not in SEARCH_MODES:
+            raise ConfigError(
+                f"search mode {key.mode!r} is unknown; choose one of "
+                f"{', '.join(SEARCH_MODES)}"
+            )
+        if key.beam < 1:
+            raise ConfigError(f"search beam={key.beam} must be >= 1")
+        return key
+
+    def _search_device(
+        self, q, *, k=None, mode=None, beam=None, kernel=None
+    ) -> tuple[Any, Any, SearchStats]:
+        """Raw device triple (dists, ids, SearchStats) through the plan
+        cache — the serving/benchmark path that stays on device."""
+        d, i, s, _ = self._search_planned(q, k=k, mode=mode, beam=beam, kernel=kernel)
+        return d, i, s
+
+    def _search_planned(self, q, *, k=None, mode=None, beam=None, kernel=None):
+        key = self._plan_key(k, mode, beam, kernel)
+        plan = self.plans.plan(key)
+        plan.calls += 1
+        delta = None if self.delta is None else delta_view(self.delta)
+        d, i, s = plan.executor(self.device, jnp.asarray(q, jnp.float32), delta)
+        return d, i, s, plan
+
+    def search(
+        self, q, *, k: int | None = None, mode: str | None = None,
+        beam: int | None = None, kernel: bool | None = None,
+    ) -> SearchResult:
+        """kNN over forest + streaming delta.  Defaults come from
+        ``cfg.search``; per-call overrides select (or create) the matching
+        cached ``SearchPlan``.  Returns a host-side ``SearchResult``."""
+        d, i, s, plan = self._search_planned(
+            q, k=k, mode=mode, beam=beam, kernel=kernel
+        )
+        d, i = np.asarray(d), np.asarray(i)
+        kk = min(plan.key.k, self.n_total)  # Def. 4: |X| <= k -> whole set
+        if d.shape[1] > kk:
+            d, i = d[:, :kk], i[:, :kk]
+        return SearchResult(dists=d, ids=i, stats=stats_to_host(s), plan=plan)
+
+    # -- write path ----------------------------------------------------------
+    def _ensure_delta(self) -> None:
+        if self.delta is None:
+            self.delta = alloc_delta(self.forest, self.capacity)
+            self.monitor = self._make_monitor()
+
+    def _make_monitor(self):
+        from repro.stream.maintenance import OverlapMonitor
+
+        needs_x = get_overlap_method(self.cfg.stream.monitor_method).needs_objects
+        return OverlapMonitor(
+            self.forest, self._maint_cfg(), x=self.x_all if needs_x else None
+        )
+
+    def _maint_cfg(self):
+        from repro.stream.maintenance import MaintenanceConfig
+
+        s = self.cfg.stream
+        return MaintenanceConfig(
+            method=s.monitor_method,
+            xi_rebuild=s.xi_rebuild,
+            drift_margin=s.drift_margin,
+            fill_rebuild=s.fill_rebuild,
+            pivot_method=s.pivot_method,
+            c_max=s.c_max,
+            seed=s.seed,
+        )
+
+    def ingest(self, xb) -> np.ndarray:
+        """Insert a batch; returns the assigned global object ids.
+
+        Chunks the batch to the per-index buffer capacity so a forced
+        maintenance pass (emptying the destination buffers) always makes the
+        retry succeed — ingestion cannot silently drop or livelock.
+        """
+        self._ensure_delta()
+        xb = np.asarray(xb, np.float32)
+        if xb.ndim != 2 or xb.shape[1] != self.forest.bucket_x.shape[2]:
+            raise ConfigError(
+                f"ingest batch must be (B, {self.forest.bucket_x.shape[2]}), "
+                f"got shape {xb.shape}"
+            )
+        ids = np.arange(self.n_total, self.n_total + len(xb), dtype=np.int64)
+        self._x_parts.append(xb)
+        self.n_total += len(xb)
+        self._x_cache = None
+        for lo in range(0, len(xb), self.capacity):
+            self._ingest_chunk(
+                xb[lo : lo + self.capacity], ids[lo : lo + self.capacity]
+            )
+        return ids
+
+    def _ingest_chunk(self, xc: np.ndarray, ic: np.ndarray) -> None:
+        # Termination argument: a round that rejects any point force-rebuilds
+        # every rejecting index, emptying its buffer into the main structure.
+        # A retried point (chunk size <= buffer capacity) can only be
+        # rejected again by re-routing to a DIFFERENT still-full buffer, and
+        # each round empties at least one of those — so at most n_indexes
+        # rounds before every point is accepted.  Retries flip the ``valid``
+        # mask instead of slicing the batch, so every round reuses one
+        # compiled ingest program (shapes never depend on the reject count).
+        xj, ij = jnp.asarray(xc), jnp.asarray(ic)
+        pending = np.ones(len(xc), bool)
+        for _ in range(self.forest.n_indexes + 1):
+            self.delta, acc = ingest(
+                self.device, self.delta, xj, ij, valid=jnp.asarray(pending)
+            )
+            pending &= ~np.asarray(acc)
+            if not pending.any():
+                return
+            # capacity hit: force-rebuild the rejecting indexes, retry rest
+            meta = pull_delta_meta(self.delta)
+            full = [
+                i for i in range(self.forest.n_indexes) if meta["dropped"][i] > 0
+            ]
+            self._rebuild(full)
+        raise RuntimeError(
+            "ingest chunk still rejected after rebuilding every full index — "
+            "invariant violation, please report"
+        )
+
+    # -- maintenance ---------------------------------------------------------
+    def check(self):
+        """Overlap-drift evaluation only (no rebuild) -> DriftReport."""
+        self._ensure_delta()
+        needs_x = get_overlap_method(self.cfg.stream.monitor_method).needs_objects
+        return self.monitor.check(self.delta, x=self.x_all if needs_x else None)
+
+    def maintain(self):
+        """Run the drift monitor; rebuild + hot-swap every triggered index.
+
+        The swap is atomic: queries see the old (device, delta) pair or the
+        new pair, never a partial state.  Returns the DriftReport.
+        """
+        report = self.check()
+        if report.triggers:
+            self._rebuild(report.triggers, report)
+        return report
+
+    def _rebuild(self, triggers: list[int], report=None) -> None:
+        from repro.stream.maintenance import rebuild_indexes
+
+        if not triggers:
+            return
+        x_all = self.x_all
+        new_forest, stats = rebuild_indexes(
+            self.forest, self.delta, x_all, triggers, self._maint_cfg()
+        )
+        # Survivors — delta members of indexes NOT rebuilt — keep their
+        # original buffers wholesale: a kept index keeps its center, so the
+        # old buffer's pivot/radius bound is still valid verbatim.  A pure
+        # device-side select (no host round-trip, no re-routing) that BY
+        # CONSTRUCTION cannot overflow: each kept buffer moves into a fresh
+        # buffer of the same capacity.  Rebuilt indexes start empty (their
+        # members were absorbed into the new trees); ``dropped`` resets —
+        # rejected points were never stored and their owners retry them.
+        new_device = device_forest(new_forest, quantize=self.cfg.search.quantize)
+        fresh = alloc_delta(new_forest, self.capacity)
+        keep = np.ones(self.forest.n_indexes, bool)
+        keep[list(triggers)] = False
+        n_migrated = int(np.asarray(self.delta.count)[keep].sum())
+        kj = jnp.asarray(keep)
+        old = self.delta
+        new_delta = fresh._replace(
+            x=jnp.where(kj[:, None, None], old.x, fresh.x),
+            ids=jnp.where(kj[:, None], old.ids, fresh.ids),
+            count=jnp.where(kj, old.count, fresh.count),
+            pivot=jnp.where(kj[:, None], old.pivot, fresh.pivot),
+            radius=jnp.where(kj, old.radius, fresh.radius),
+            sum_x=jnp.where(kj[:, None], old.sum_x, fresh.sum_x),
+        )
+
+        # ---- atomic swap: a query sees the old pair or the new pair --------
+        self.forest, self._device, self.delta = new_forest, new_device, new_delta
+        self.monitor = self._make_monitor()
+        stats["triggers"] = list(triggers)
+        stats["reasons"] = dict(report.reasons) if report is not None else {}
+        stats["n_migrated"] = n_migrated
+        self.rebuild_log.append(stats)
+
+    # -- persistence ---------------------------------------------------------
+    def save(self, path) -> str:
+        """Serialize the WHOLE index (forest + host trees + delta + config +
+        dataset) to one .npz; returns the path written.  A ``load`` of that
+        file serves bitwise-identical searches without rebuilding."""
+        return persist.save_state(self, path)
+
+    @classmethod
+    def load(cls, path) -> "OverlapIndex":
+        """Rebuild-free restart from ``save`` output."""
+        st = persist.load_state(path)
+        return cls._wire(
+            np.asarray(st["x_all"], np.float32),
+            st["forest"],
+            st["cfg"],
+            st["build_report"],
+            n_total=st["n_total"],
+            delta=st["delta"],
+            capacity=st["capacity"],
+            rebuild_log=st["rebuild_log"],
+            monitor_baseline=st["monitor_baseline"],
+        )
+
+    # -- serving -------------------------------------------------------------
+    def to_datastore(
+        self, values, *, stream_capacity: int = 0, quantized: bool | None = None
+    ):
+        """Wrap this index as a kNN-LM serving ``ForestDatastore``.
+
+        ``values[i]`` is the token paired with object id ``i`` — one value
+        per object currently in the index (``n_total``).  A live streaming
+        delta rides along (its members stay retrievable and serve-side
+        ``ingest_keys`` appends into the same buffers).  ``stream_capacity``
+        preallocates a values tail for that many FUTURE serve-side inserts;
+        ``quantized`` overrides ``cfg.search.quantize`` for the datastore's
+        bucket storage.
+        """
+        from repro.serve.retrieval import datastore_from_index
+
+        return datastore_from_index(
+            self, values, stream_capacity=stream_capacity, quantized=quantized
+        )
+
+    # -- introspection -------------------------------------------------------
+    def structure(self) -> dict[str, Any]:
+        """aggregate_structure + live delta occupancy (always fresh)."""
+        s = self.forest.aggregate_structure()
+        if self.delta is not None:
+            s["delta_fill"] = np.asarray(self.delta.count).tolist()
+        else:
+            s["delta_fill"] = [0] * self.forest.n_indexes
+        s["delta_capacity"] = self.capacity
+        s["n_objects"] = self.n_total
+        s["rebuilds"] = self.forest.build_stats.get("rebuilds", 0)
+        return s
+
+    def __repr__(self) -> str:
+        return (
+            f"OverlapIndex(n={self.n_total}, indexes={self.forest.n_indexes}, "
+            f"buckets={self.forest.n_buckets}, method={self.cfg.index.method!r}, "
+            f"delta={'on' if self.delta is not None else 'off'}, "
+            f"plans={len(self.plans)})"
+        )

@@ -1,0 +1,143 @@
+"""Search planning: one cached, jitted executor per static-option tuple.
+
+``knn_search`` used to be one big ``jax.jit`` whose cache was invisible —
+every caller paid tracing whenever *any* static knob or operand shape moved,
+and nobody could observe it.  The facade splits that into
+
+  * ``PlanKey``     — the static options a compiled executor is specialized
+                      on: ``(k, mode, beam, kernel, quantize, delta
+                      capacity)``;
+  * ``SearchPlan``  — the key plus a ``jax.jit``-wrapped closure over
+                      ``core.knn.knn_search_impl`` with those options baked
+                      in, and a *trace counter* (incremented only while
+                      tracing, so tests can assert "no re-trace");
+  * ``PlanCache``   — the per-index table of plans with hit/miss counters.
+
+Repeated ``OverlapIndex.search`` calls with stable options and shapes hit
+the same plan and the same compiled executable: zero re-tracing.  A changed
+query-batch shape re-specializes *within* the plan (jax's shape cache, the
+trace counter records it); a changed option is a new plan.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, NamedTuple
+
+import jax
+import numpy as np
+
+from repro.core.knn import DeltaView, DeviceForest, SearchStats, knn_search_impl
+
+
+class PlanKey(NamedTuple):
+    """Static options one compiled search executor is specialized on."""
+
+    k: int
+    mode: str
+    beam: int
+    kernel: bool
+    quantize: bool
+    delta_capacity: int | None  # None: no delta phase compiled in
+
+
+@dataclass
+class SearchPlan:
+    """A compiled search program for one ``PlanKey``.
+
+    ``executor(device_forest, q, delta)`` returns the raw device triple
+    ``(dists, ids, SearchStats)``.  ``traces`` counts actual jax traces
+    (option tuple is fixed, so a trace means a new operand shape/dtype);
+    ``calls`` counts executions through this plan.
+    """
+
+    key: PlanKey
+    executor: Callable[..., tuple[Any, Any, SearchStats]] = None  # set below
+    traces: int = 0
+    calls: int = 0
+
+
+def _build_plan(key: PlanKey) -> SearchPlan:
+    plan = SearchPlan(key=key)
+
+    def _impl(forest: DeviceForest, q, delta: DeltaView | None):
+        # Runs only while jax traces (compiled executions skip python):
+        # the counter is exactly the number of specializations.
+        plan.traces += 1
+        return knn_search_impl(
+            forest, q, k=key.k, mode=key.mode, beam=key.beam,
+            kernel=key.kernel, delta=delta,
+        )
+
+    plan.executor = jax.jit(_impl)
+    return plan
+
+
+class PlanCache:
+    """Per-``OverlapIndex`` table of search plans."""
+
+    def __init__(self) -> None:
+        self._plans: dict[PlanKey, SearchPlan] = {}
+        self.hits = 0
+        self.misses = 0
+
+    def plan(self, key: PlanKey) -> SearchPlan:
+        got = self._plans.get(key)
+        if got is None:
+            self.misses += 1
+            got = self._plans[key] = _build_plan(key)
+        else:
+            self.hits += 1
+        return got
+
+    def __len__(self) -> int:
+        return len(self._plans)
+
+    def __contains__(self, key: PlanKey) -> bool:
+        return key in self._plans
+
+    def keys(self) -> tuple[PlanKey, ...]:
+        return tuple(self._plans)
+
+    def stats(self) -> dict[str, int]:
+        return dict(
+            plans=len(self._plans),
+            hits=self.hits,
+            misses=self.misses,
+            traces=sum(p.traces for p in self._plans.values()),
+        )
+
+
+@dataclass(frozen=True)
+class SearchResult:
+    """Structured result of ``OverlapIndex.search``: true L2 distances,
+    global object ids (-1 where fewer than k objects were reachable), and
+    the paper's per-query cost instrumentation — as host numpy.
+
+    Iterates as ``(dists, ids, stats)`` so legacy triple-unpacking keeps
+    working.
+    """
+
+    dists: np.ndarray  # (Q, k')
+    ids: np.ndarray  # (Q, k')
+    stats: dict[str, Any]
+    plan: SearchPlan = field(repr=False, compare=False, default=None)
+
+    def __iter__(self):
+        yield from (self.dists, self.ids, self.stats)
+
+    @property
+    def k(self) -> int:
+        return int(self.dists.shape[1])
+
+
+def stats_to_host(s: SearchStats) -> dict[str, Any]:
+    """SearchStats device arrays -> the host dict shape the benchmarks and
+    the legacy ``knn_search_host`` wrapper always reported."""
+    return {
+        "buckets_visited": np.asarray(s.buckets_visited),
+        "distances": np.asarray(s.distances),
+        "bound_distances": np.asarray(s.bound_distances),
+        "padded_distances": np.asarray(s.padded_distances),
+        "comparisons": np.asarray(s.comparisons),
+        "steps": int(s.steps),
+    }

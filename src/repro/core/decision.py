@@ -102,13 +102,20 @@ def decide(
     xi_min: float,
     xi_max: float,
 ) -> tuple[list[Partition], DecisionStats]:
-    """Apply §4.3 to DBSCAN partitions. Returns final groups + stats."""
+    """Apply §4.3 to DBSCAN partitions. Returns final groups + stats.
+
+    ``method`` resolves through the overlap-method registry
+    (``core.overlap.register_overlap_method``) — the paper's VBM/DBM/OBM are
+    the built-in entries; any registered heuristic works here.  Unknown
+    names fail fast with the registered list, before any work is done.
+    """
+    entry = ovl.get_overlap_method(method)
     x = np.asarray(x, np.float32)
     n_dim = x.shape[1]
     c0 = len(radii)
     stats = DecisionStats(n_initial=c0)
     stats.distance_computations += c0 * c0  # pivot-pivot distances
-    if method == "obm":
+    if entry.needs_objects:
         stats.distance_computations += len(x) * c0  # ball membership pass
 
     rates = _rate_matrix(method, x, pivots, radii, assign)
@@ -135,7 +142,7 @@ def decide(
         rd = np.array([g.radius for g in groups], np.float32)
         rates = _rate_matrix(method, x, pv, rd, assign_g)
         stats.distance_computations += len(groups) ** 2
-        if method == "obm":
+        if entry.needs_objects:
             stats.distance_computations += len(x) * len(groups)
     else:
         rates = np.zeros((1, 1), np.float32)

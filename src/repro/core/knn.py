@@ -56,6 +56,7 @@ import numpy as np
 
 from repro.core.forest import ForestArrays
 from repro.core.metric import pairwise
+from repro.deprecation import warn_deprecated
 from repro.kernels import ops as kops
 from repro.kernels import ref as kref
 
@@ -233,8 +234,7 @@ def _scan_phase(
     return jax.lax.while_loop(cond, body, carry)
 
 
-@functools.partial(jax.jit, static_argnames=("k", "mode", "beam", "kernel"))
-def knn_search(
+def knn_search_impl(
     forest: DeviceForest,
     q: Array,
     *,
@@ -245,6 +245,13 @@ def knn_search(
     delta: DeltaView | None = None,
 ) -> tuple[Array, Array, SearchStats]:
     """Batched kNN over the forest. Returns (dists (Q,k), ids (Q,k), stats).
+
+    This is the EXECUTOR: a pure, un-jitted function.  The facade's planner
+    (``repro.api.plan.SearchPlan``) closes a ``jax.jit`` over it once per
+    static-option tuple ``(k, mode, beam, kernel, quantize, delta shape)``
+    and caches the compiled executable so repeated searches with stable
+    shapes never re-trace.  ``knn_search`` below is the legacy jitted entry,
+    kept as a deprecation shim.
 
     dists are true L2 distances; ids are global object ids (-1 if fewer than
     k objects were reachable).
@@ -362,6 +369,40 @@ def knn_search(
     return jnp.sqrt(out.top_d), out.top_i, stats
 
 
+# Jitted executor shared by the legacy entry points below.  The facade does
+# NOT use this cache — it owns one executor per SearchPlan (repro.api.plan).
+knn_search_jit = functools.partial(
+    jax.jit, static_argnames=("k", "mode", "beam", "kernel")
+)(knn_search_impl)
+
+
+def knn_search(
+    forest: DeviceForest,
+    q: Array,
+    *,
+    k: int,
+    mode: str = "forest",
+    beam: int = 1,
+    kernel: bool = True,
+    delta: DeltaView | None = None,
+) -> tuple[Array, Array, SearchStats]:
+    """Deprecated jitted entry — use ``repro.api.OverlapIndex.search``.
+
+    Behaviour is unchanged (same executor, same jit cache); only the entry
+    point moved: the facade plans/caches executors per static-option tuple
+    and returns a structured ``SearchResult``.
+    """
+    warn_deprecated("repro.core.knn.knn_search", "repro.api.OverlapIndex.search")
+    return knn_search_jit(
+        forest, q, k=k, mode=mode, beam=beam, kernel=kernel, delta=delta
+    )
+
+
+# legacy escape hatch used by kernel tests to force re-dispatch after
+# flipping REPRO_FORCE_PALLAS (the flag is read at trace time)
+knn_search.clear_cache = knn_search_jit.clear_cache
+
+
 @functools.partial(jax.jit, static_argnames=("k", "kernel"))
 def knn_exact(x: Array, q: Array, *, k: int, kernel: bool = True) -> tuple[Array, Array]:
     """Brute-force oracle: exact kNN of q (Q, D) in x (N, D)."""
@@ -381,30 +422,30 @@ def knn_search_host(
     quantize: bool = False,
     delta: DeltaView | None = None,
 ):
-    """Convenience host wrapper returning numpy results + python-int stats.
+    """Deprecated host wrapper — use ``repro.api.OverlapIndex.search``
+    (numpy results + python-int stats, plus plan caching and persistence).
 
-    ``kernel`` selects the kernels/ops dispatch path (see knn_search);
+    ``kernel`` selects the kernels/ops dispatch path (see knn_search_impl);
     ``quantize`` stores bucket members int8 on device (device_forest);
     ``delta`` scans the streaming delta buckets as a second phase.
     """
+    warn_deprecated(
+        "repro.core.knn.knn_search_host", "repro.api.OverlapIndex.search"
+    )
     df = device_forest(forest, quantize=quantize)
-    d, i, s = knn_search(
+    d, i, s = knn_search_jit(
         df, jnp.asarray(q, jnp.float32), k=k, mode=mode, beam=beam, kernel=kernel,
         delta=delta,
     )
-    # Def. 4: |X| <= k  =>  answer set is the whole dataset.
+    # Def. 4: |X| <= k  =>  answer set is the whole dataset.  (Same
+    # truncation as OverlapIndex.search: bucket/delta membership is a
+    # strict partition of the objects, so this count equals its n_total.)
     n_real = int(forest.bucket_mask.sum())
     if delta is not None:
         n_real += int(jnp.sum(delta.mask))
     if d.shape[1] > min(k, n_real):
         d = d[:, : min(k, n_real)]
         i = i[:, : min(k, n_real)]
-    stats = {
-        "buckets_visited": np.asarray(s.buckets_visited),
-        "distances": np.asarray(s.distances),
-        "bound_distances": np.asarray(s.bound_distances),
-        "padded_distances": np.asarray(s.padded_distances),
-        "comparisons": np.asarray(s.comparisons),
-        "steps": int(s.steps),
-    }
-    return np.asarray(d), np.asarray(i), stats
+    from repro.api.plan import stats_to_host  # lazy: api sits above core
+
+    return np.asarray(d), np.asarray(i), stats_to_host(s)

@@ -27,7 +27,9 @@ Degenerate cases shared by all three (Defs. 7/10/11):
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
@@ -188,6 +190,93 @@ def max_neighbor_rate(rates: Array) -> Array:
     return jnp.max(rates * (1.0 - jnp.eye(c, dtype=rates.dtype)), axis=1)
 
 
+# ---------------------------------------------------------------------------
+# Overlap-method registry — VBM/DBM/OBM are *entries*, not special cases
+# ---------------------------------------------------------------------------
+#
+# Every consumer (decision.decide, stream.maintenance.OverlapMonitor, the
+# OverlapIndex facade) resolves methods through this table, so a hybrid or
+# learned heuristic registered at runtime flows through the whole pipeline
+# without touching any dispatch site.
+
+
+@dataclasses.dataclass(frozen=True)
+class OverlapMethod:
+    """One registered overlap heuristic.
+
+    ``matrix_fn(pivots, radii, *, x=None, assign=None) -> (C, C)`` rate
+    matrix in [0, 1] with a zero diagonal.  ``needs_objects`` marks methods
+    defined over the objects themselves (like the paper's OBM, Def. 11) —
+    callers must then supply the dataset ``x`` and partition ``assign``, and
+    cost accounting charges the per-object membership pass.
+    """
+
+    name: str
+    matrix_fn: Callable[..., Array]
+    needs_objects: bool = False
+
+
+_REGISTRY: dict[str, OverlapMethod] = {}
+
+
+def register_overlap_method(
+    name: str,
+    matrix_fn: Callable[..., Array],
+    *,
+    needs_objects: bool = False,
+    overwrite: bool = False,
+) -> OverlapMethod:
+    """Register an overlap heuristic under ``name`` (see OverlapMethod)."""
+    if name in _REGISTRY and not overwrite:
+        raise ValueError(
+            f"overlap method {name!r} is already registered; pass "
+            "overwrite=True to replace it"
+        )
+    entry = OverlapMethod(name=name, matrix_fn=matrix_fn, needs_objects=needs_objects)
+    _REGISTRY[name] = entry
+    return entry
+
+
+def unregister_overlap_method(name: str) -> None:
+    _REGISTRY.pop(name, None)
+
+
+def available_overlap_methods() -> tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def get_overlap_method(name: str) -> OverlapMethod:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown overlap method {name!r}; registered methods: "
+            f"{', '.join(available_overlap_methods())} "
+            "(repro.core.overlap.register_overlap_method to add one)"
+        ) from None
+
+
+def _vbm_matrix(pivots: Array, radii: Array, *, x=None, assign=None) -> Array:
+    return overlap_matrix_geometric(
+        pivots, radii, n_dim=int(pivots.shape[-1]), method="vbm"
+    )
+
+
+def _dbm_matrix(pivots: Array, radii: Array, *, x=None, assign=None) -> Array:
+    return overlap_matrix_geometric(
+        pivots, radii, n_dim=int(pivots.shape[-1]), method="dbm"
+    )
+
+
+def _obm_matrix(pivots: Array, radii: Array, *, x=None, assign=None) -> Array:
+    return overlap_matrix_objects(x, assign, pivots, radii)
+
+
+register_overlap_method("vbm", _vbm_matrix)
+register_overlap_method("dbm", _dbm_matrix)
+register_overlap_method("obm", _obm_matrix, needs_objects=True)
+
+
 def overlap_matrix(
     method: str,
     pivots: Array,
@@ -196,12 +285,11 @@ def overlap_matrix(
     x: Array | None = None,
     assign: Array | None = None,
 ) -> Array:
-    """Dispatch: 'vbm' | 'dbm' | 'obm' -> (C, C) rate matrix."""
-    n_dim = int(pivots.shape[-1])
-    if method in ("vbm", "dbm"):
-        return overlap_matrix_geometric(pivots, radii, n_dim=n_dim, method=method)
-    if method == "obm":
-        if x is None or assign is None:
-            raise ValueError("OBM requires the dataset and partition assignment")
-        return overlap_matrix_objects(x, assign, pivots, radii)
-    raise ValueError(f"unknown overlap method {method!r}")
+    """Resolve ``method`` through the registry -> (C, C) rate matrix."""
+    entry = get_overlap_method(method)
+    if entry.needs_objects and (x is None or assign is None):
+        raise ValueError(
+            f"overlap method {method!r} is object-based and needs the dataset "
+            "and partition assignment (pass x= and assign=)"
+        )
+    return entry.matrix_fn(pivots, radii, x=x, assign=assign)

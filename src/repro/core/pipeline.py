@@ -1,13 +1,21 @@
 """End-to-end index pipeline (paper §4): preprocessing -> overlap estimation
--> decision-making -> forest construction.  Public entry points:
+-> decision-making -> forest construction.
 
-  build_index(x, cfg)     — the paper's proposed method (VBM / DBM / OBM)
-  build_baseline(x, cfg)  — the BCCF-tree baseline (single k-means tree)
+The supported entry point is the ``repro.api.OverlapIndex`` facade
+(``OverlapIndex.build(x, cfg)`` / ``OverlapIndex.baseline(x, cfg)``), which
+wraps the implementations here:
+
+  build_index_core(x, cfg)     — the paper's proposed method (registry
+                                 overlap heuristics: VBM / DBM / OBM / ...)
+  build_baseline_core(x, cfg)  — the BCCF-tree baseline (single tree)
+
+``build_index`` / ``build_baseline`` remain as thin deprecation shims.
 """
 from __future__ import annotations
 
 import math
 import time
+import warnings
 from dataclasses import dataclass, field
 from typing import Any
 
@@ -16,6 +24,7 @@ import numpy as np
 from repro.core.dbscan import dbscan, partitions_from_labels
 from repro.core.decision import Partition, decide
 from repro.core.forest import ForestArrays, build_forest
+from repro.deprecation import warn_deprecated
 
 
 @dataclass(frozen=True)
@@ -63,7 +72,8 @@ def default_delta_capacity(n: int) -> int:
     return max(64, default_c_max(n))
 
 
-def build_index(x, cfg: IndexConfig) -> tuple[ForestArrays, BuildReport]:
+def build_index_core(x, cfg: IndexConfig) -> tuple[ForestArrays, BuildReport]:
+    """The paper's pipeline: DBSCAN -> overlap -> decision -> forest."""
     t0 = time.perf_counter()
     x = np.asarray(x, np.float32)
     n = len(x)
@@ -100,20 +110,57 @@ def build_index(x, cfg: IndexConfig) -> tuple[ForestArrays, BuildReport]:
     return forest, report
 
 
-def build_baseline(x, cfg: IndexConfig | None = None) -> tuple[ForestArrays, BuildReport]:
-    """BCCF-tree baseline [5]: one recursive 2-means tree over all data."""
+def build_baseline_core(
+    x, cfg: IndexConfig | None = None
+) -> tuple[ForestArrays, BuildReport]:
+    """BCCF-tree baseline [5]: one recursive tree over all data.
+
+    The documented baseline semantics is 2-means ('kmeans') pivot selection
+    — that is what ``cfg=None`` builds.  An explicit ``cfg`` is HONORED,
+    including its ``pivot_method`` (it used to be silently overridden with
+    'kmeans'); a non-kmeans choice emits a UserWarning because the result is
+    then a single-tree ablation, not the paper's BCCF baseline.
+    """
     t0 = time.perf_counter()
     x = np.asarray(x, np.float32)
     n = len(x)
-    cfg = cfg or IndexConfig()
+    if cfg is None:
+        cfg = IndexConfig(pivot_method="kmeans")
+    elif cfg.pivot_method != "kmeans":
+        warnings.warn(
+            f"build_baseline honors cfg.pivot_method={cfg.pivot_method!r}, but "
+            "the documented BCCF baseline uses 'kmeans' 2-means pivots; pass "
+            "pivot_method='kmeans' (or cfg=None) to reproduce the paper's "
+            "baseline",
+            UserWarning,
+            stacklevel=3,
+        )
     c_max = cfg.c_max or default_c_max(n)
     pivot = x.mean(axis=0).astype(np.float32)
     radius = float(np.sqrt(((x - pivot) ** 2).sum(-1)).max())
     groups = [Partition(members=np.arange(n), pivot=pivot, radius=radius)]
-    forest = build_forest(x, groups, c_max=c_max, pivot_method="kmeans", seed=cfg.seed)
+    forest = build_forest(
+        x, groups, c_max=c_max, pivot_method=cfg.pivot_method, seed=cfg.seed
+    )
     report = BuildReport(config=cfg, n_objects=n, n_clusters=1, n_indexes=1)
     report.tree_distances = forest.build_stats["tree_distances"]
     report.tree_comparisons = forest.build_stats["tree_comparisons"]
     report.wall_time_s = time.perf_counter() - t0
     report.detail = dict(structure=forest.aggregate_structure())
     return forest, report
+
+
+def build_index(x, cfg: IndexConfig) -> tuple[ForestArrays, BuildReport]:
+    """Deprecated — use ``repro.api.OverlapIndex.build(x, cfg)``."""
+    warn_deprecated(
+        "repro.core.pipeline.build_index", "repro.api.OverlapIndex.build"
+    )
+    return build_index_core(x, cfg)
+
+
+def build_baseline(x, cfg: IndexConfig | None = None) -> tuple[ForestArrays, BuildReport]:
+    """Deprecated — use ``repro.api.OverlapIndex.baseline(x, cfg)``."""
+    warn_deprecated(
+        "repro.core.pipeline.build_baseline", "repro.api.OverlapIndex.baseline"
+    )
+    return build_baseline_core(x, cfg)

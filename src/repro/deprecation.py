@@ -1,0 +1,33 @@
+"""Deprecation machinery for the pre-facade public surfaces.
+
+A dedicated warning class (instead of bare ``DeprecationWarning``) lets the
+CI gate turn *exactly these* warnings into errors — shim usage inside
+``src/repro`` itself fails the build (tests/test_api_facade.py) without
+tripping on deprecations emitted by third-party libraries.
+
+This module is a leaf: it must import nothing from ``repro`` so that the
+shims (core/pipeline.py, core/knn.py, stream/maintenance.py) can use it
+without creating an import cycle with ``repro.api``.
+"""
+from __future__ import annotations
+
+import warnings
+
+
+class RepoDeprecationWarning(FutureWarning):
+    """A repro-owned API surface superseded by ``repro.api.OverlapIndex``.
+
+    Subclasses ``FutureWarning`` (not ``DeprecationWarning``) so the
+    migration signal is VISIBLE by default in user code too — Python's
+    default filters swallow DeprecationWarning outside ``__main__``, which
+    would hide the shims' message from exactly the downstream callers who
+    need to migrate.
+    """
+
+
+def warn_deprecated(old: str, new: str, *, stacklevel: int = 3) -> None:
+    warnings.warn(
+        f"{old} is deprecated; use {new} instead",
+        RepoDeprecationWarning,
+        stacklevel=stacklevel,
+    )

@@ -83,6 +83,57 @@ class ForestDatastore:
     next_id: int = 0
 
 
+def datastore_from_index(
+    ix,
+    values: np.ndarray,
+    *,
+    stream_capacity: int = 0,
+    quantized: bool | None = None,
+) -> ForestDatastore:
+    """Wrap a built ``repro.api.OverlapIndex`` as a serving datastore — the
+    implementation behind ``OverlapIndex.to_datastore``.
+
+    ``values[i]`` pairs with object id ``i`` (one per ``ix.n_total``
+    object, streamed members included).  The index's live delta buffers (if
+    any) ride along unchanged, so already-streamed pairs stay retrievable;
+    ``stream_capacity > 0`` preallocates a values tail for that many FUTURE
+    serve-side inserts (``ingest_keys`` stops issuing ids at the tail end,
+    so an accepted key can never index past it) and — when the index has no
+    delta yet — per-index buffers sized ``2 * stream_capacity / n_indexes``
+    (floor 32): 2x headroom for routing skew without multiplying memory by
+    the index count; a pathologically skewed stream hits the reported
+    capacity-reject path instead."""
+    from repro.core.knn import device_forest
+    from repro.stream.ingest import alloc_delta
+
+    values = np.asarray(values)
+    if len(values) != ix.n_total:
+        raise ValueError(
+            f"need one value per indexed object: got {len(values)} values "
+            f"for {ix.n_total} objects"
+        )
+    device = (
+        ix.device if quantized is None
+        else device_forest(ix.forest, quantize=quantized)
+    )
+    delta = ix.delta
+    vals = jnp.asarray(values, jnp.int32)
+    if stream_capacity > 0:
+        if delta is None:
+            capd = min(
+                stream_capacity, -(-2 * stream_capacity // ix.forest.n_indexes)
+            )
+            delta = alloc_delta(ix.forest, max(32, capd))
+        vals = jnp.concatenate([vals, jnp.zeros((stream_capacity,), jnp.int32)])
+    return ForestDatastore(
+        forest=device,
+        values=vals,
+        delta=delta,
+        n_main=ix.n_total,
+        next_id=ix.n_total,
+    )
+
+
 def build_forest_datastore(
     keys: np.ndarray,
     values: np.ndarray,
@@ -93,19 +144,12 @@ def build_forest_datastore(
     quantized: bool = False,
     stream_capacity: int = 0,
 ) -> ForestDatastore:
-    """Build the paper's index over the datastore keys (host-side, like any
-    vector store's build path).  ``quantized`` stores bucket members int8
-    (device_forest's storage knob) — bounds stay f32, only the member scan
-    dequantizes in-register.  ``stream_capacity > 0`` preallocates streaming
-    state for up to ``stream_capacity`` TOTAL ingested pairs: a values tail
-    of that length (``ingest_keys`` stops issuing ids at the tail end, so an
-    accepted key can never index past it) and per-index delta buffers sized
-    ``2 * stream_capacity / n_indexes`` (floor 32) — 2x headroom for routing
-    skew without multiplying memory by the index count; a pathologically
-    skewed stream hits the reported capacity-reject path instead."""
-    from repro.core import IndexConfig, build_index
-    from repro.core.knn import device_forest
+    """Build the paper's index over the datastore keys and wrap it for
+    serving — ``OverlapIndex.build(keys, ...).to_datastore(values, ...)``
+    with an eps default derived from the keys (k-dist style heuristic)."""
+    from repro.api import Config, IndexConfig, OverlapIndex, SearchConfig
 
+    keys = np.asarray(keys, np.float32)
     if eps is None:
         # k-dist style heuristic: median NN distance of a sample x 2
         g = np.random.default_rng(0)
@@ -113,25 +157,11 @@ def build_forest_datastore(
         d2 = ((sample[:, None, :] - sample[None, :, :]) ** 2).sum(-1)
         np.fill_diagonal(d2, np.inf)
         eps = 2.0 * float(np.sqrt(np.median(d2.min(axis=1))))
-    cfg = IndexConfig(method=method, eps=eps, min_pts=min_pts, dbscan_block=2048)
-    forest, _ = build_index(np.asarray(keys, np.float32), cfg)
-    delta = None
-    vals = jnp.asarray(values, jnp.int32)
-    if stream_capacity > 0:
-        from repro.stream.ingest import alloc_delta
-
-        capd = min(stream_capacity, -(-2 * stream_capacity // forest.n_indexes))
-        delta = alloc_delta(forest, max(32, capd))
-        vals = jnp.concatenate(
-            [vals, jnp.zeros((stream_capacity,), jnp.int32)]
-        )
-    return ForestDatastore(
-        forest=device_forest(forest, quantize=quantized),
-        values=vals,
-        delta=delta,
-        n_main=len(keys),
-        next_id=len(keys),
-    )
+    ix = OverlapIndex.build(keys, Config(
+        index=IndexConfig(method=method, eps=eps, min_pts=min_pts, dbscan_block=2048),
+        search=SearchConfig(quantize=quantized),
+    ))
+    return ix.to_datastore(values, stream_capacity=stream_capacity)
 
 
 def ingest_keys(
@@ -189,14 +219,16 @@ def forest_knn(
     """(distances (B,k), token values (B,k)) via the paper's Alg. 2 search.
 
     ``kernel`` selects the kernels/ops dispatch path (fused Pallas bucket
-    scan on TPU) vs the pure-jnp reference — see core.knn.knn_search.
+    scan on TPU) vs the pure-jnp reference — see core.knn.knn_search_impl.
     Streaming deltas, when present, are scanned as the second phase.
+    (Executor, not the legacy jitted entry: this runs INSIDE the engine's
+    jitted decode step, which is the compilation boundary.)
     """
-    from repro.core.knn import knn_search
+    from repro.core.knn import knn_search_impl
     from repro.stream.ingest import delta_view
 
     delta = None if ds.delta is None else delta_view(ds.delta)
-    d, ids, _ = knn_search(
+    d, ids, _ = knn_search_impl(
         ds.forest, hidden.astype(jnp.float32), k=k, mode="forest", kernel=kernel,
         delta=delta,
     )

@@ -40,26 +40,27 @@ import numpy as np
 
 from repro.core.bccf import build_tree
 from repro.core.forest import ForestArrays, swap_trees
-from repro.core.knn import DeviceForest, device_forest, knn_search
-from repro.core.overlap import max_neighbor_rate, overlap_matrix
-from repro.core.pipeline import IndexConfig, build_index, default_delta_capacity
-from repro.stream.ingest import (
-    DeltaBuffer,
-    alloc_delta,
-    delta_view,
-    ingest,
-    pull_delta_meta,
-    updated_geometry,
+from repro.core.overlap import (
+    get_overlap_method,
+    max_neighbor_rate,
+    overlap_matrix,
 )
+from repro.core.pipeline import IndexConfig
+from repro.deprecation import warn_deprecated
+from repro.stream.ingest import DeltaBuffer, pull_delta_meta, updated_geometry
 
 import jax.numpy as jnp
 
 
 @dataclass(frozen=True)
 class MaintenanceConfig:
-    """ξ thresholds and rebuild knobs for the drift monitor."""
+    """ξ thresholds and rebuild knobs for the drift monitor.
 
-    method: str = "dbm"  # vbm | dbm | obm — heuristic re-evaluated online
+    (The facade expresses the same knobs as ``repro.api.StreamConfig``;
+    this struct remains the engine-room parameter set.)
+    """
+
+    method: str = "dbm"  # any registered overlap method, re-evaluated online
     xi_rebuild: float = 0.8  # absolute overlap rate forcing repartition
     drift_margin: float | None = None  # optional rise-over-baseline trigger
     fill_rebuild: float = 0.75  # delta fill fraction forcing a merge-rebuild
@@ -109,8 +110,11 @@ def _rates(
     x: np.ndarray | None,
     assign: np.ndarray | None,
 ) -> np.ndarray:
-    if method == "obm" and (x is None or assign is None):
-        raise ValueError("OBM drift monitoring needs the dataset + assignment")
+    if get_overlap_method(method).needs_objects and (x is None or assign is None):
+        raise ValueError(
+            f"object-based drift monitoring ({method!r}) needs the dataset "
+            "+ assignment"
+        )
     return np.asarray(
         overlap_matrix(
             method,
@@ -142,10 +146,14 @@ class OverlapMonitor:
     ):
         self.cfg = cfg
         self.forest = forest
+        needs_objects = get_overlap_method(cfg.method).needs_objects
         assign = None
-        if cfg.method == "obm":
+        if needs_objects:
             if x is None:
-                raise ValueError("OBM monitor needs the dataset at construction")
+                raise ValueError(
+                    f"object-based monitor ({cfg.method!r}) needs the dataset "
+                    "at construction"
+                )
             assign = object_assignment(forest, None, len(x))
         self.rates_baseline = _rates(
             cfg.method, forest.index_centers, forest.index_radii, x, assign
@@ -155,14 +163,17 @@ class OverlapMonitor:
         self, delta: DeltaBuffer, *, x: np.ndarray | None = None
     ) -> DriftReport:
         cfg = self.cfg
+        needs_objects = get_overlap_method(cfg.method).needs_objects
         centers_d, radii_d = updated_geometry(delta)
         centers = np.asarray(centers_d)
         radii = np.asarray(radii_d)
-        host = pull_delta_meta(delta, ids=cfg.method == "obm")
+        host = pull_delta_meta(delta, ids=needs_objects)
         assign = None
-        if cfg.method == "obm":
+        if needs_objects:
             if x is None:
-                raise ValueError("OBM drift check needs the dataset")
+                raise ValueError(
+                    f"object-based drift check ({cfg.method!r}) needs the dataset"
+                )
             assign = object_assignment(self.forest, host, len(x))
         rates = _rates(cfg.method, centers, radii, x, assign)
 
@@ -254,20 +265,15 @@ def rebuild_indexes(
 
 
 class StreamingForest:
-    """Ingest → monitor → rebuild lifecycle owner (single-writer).
+    """Deprecated shim — use ``repro.api.OverlapIndex``.
 
-    Wraps (host ForestArrays, device DeviceForest, DeltaBuffer, monitor)
-    behind three calls:
-
-      ids = sf.ingest(xb)        # batched insert; NEVER loses a point
-      d, i, s = sf.search(q, k)  # forest + delta, exact within selection
-      report = sf.maintain()     # drift check; rebuild + hot swap if fired
-
-    Atomic swap discipline: queries issued before a swap use the old
-    (device, delta) pair; queries after use the new pair — there is no
-    intermediate state in which either structure is partially updated, so
-    there is no search-correctness gap (tests/test_stream.py asserts
-    exactness immediately before and after a swap).
+    The ingest → monitor → rebuild lifecycle this class used to own lives
+    on the facade now (``OverlapIndex.ingest`` / ``.maintain`` /
+    ``.search``); this wrapper only translates the legacy
+    ``(IndexConfig, MaintenanceConfig, delta_capacity)`` argument triple
+    into one ``repro.api.Config`` tree and delegates, preserving the old
+    attribute surface (``forest`` / ``device`` / ``delta`` / ``monitor`` /
+    ``rebuild_log`` / ...) and the old device-tuple ``search`` return.
     """
 
     def __init__(
@@ -278,144 +284,80 @@ class StreamingForest:
         *,
         delta_capacity: int | None = None,
     ):
-        x0 = np.asarray(x0, np.float32)
-        self.index_cfg = index_cfg or IndexConfig()
-        self.maint_cfg = maint_cfg or MaintenanceConfig()
-        self.forest, self.build_report = build_index(x0, self.index_cfg)
-        self.device: DeviceForest = device_forest(self.forest)
-        self.capacity = delta_capacity or default_delta_capacity(len(x0))
-        self.delta: DeltaBuffer = alloc_delta(self.forest, self.capacity)
-        self._x_parts: list[np.ndarray] = [x0]
-        self._x_cache: np.ndarray | None = x0
-        self.n_total = len(x0)
-        self.monitor = OverlapMonitor(
-            self.forest, self.maint_cfg,
-            x=x0 if self.maint_cfg.method == "obm" else None,
+        warn_deprecated("repro.stream.StreamingForest", "repro.api.OverlapIndex")
+        from repro.api import Config, OverlapIndex, StreamConfig, as_index_config
+
+        mc = maint_cfg or MaintenanceConfig()
+        cfg = Config(
+            index=as_index_config(index_cfg or IndexConfig()),
+            stream=StreamConfig(
+                capacity=delta_capacity,
+                monitor_method=mc.method,
+                xi_rebuild=mc.xi_rebuild,
+                drift_margin=mc.drift_margin,
+                fill_rebuild=mc.fill_rebuild,
+                pivot_method=mc.pivot_method,
+                c_max=mc.c_max,
+                seed=mc.seed,
+            ),
         )
-        self.rebuild_log: list[dict[str, Any]] = []
+        self._ix = OverlapIndex.build(np.asarray(x0, np.float32), cfg)
+        # legacy semantics: buffers + monitor live from construction
+        self._ix._ensure_delta()
+        self.index_cfg = cfg.index
+        self.maint_cfg = mc
 
-    # --- dataset bookkeeping ------------------------------------------------
-    @property
-    def x_all(self) -> np.ndarray:
-        if self._x_cache is None or len(self._x_cache) != self.n_total:
-            self._x_cache = np.concatenate(self._x_parts)
-            self._x_parts = [self._x_cache]
-        return self._x_cache
-
-    # --- write path ---------------------------------------------------------
+    # --- lifecycle delegation ----------------------------------------------
     def ingest(self, xb: np.ndarray) -> np.ndarray:
-        """Insert a batch; returns the assigned global object ids.
+        return self._ix.ingest(xb)
 
-        Chunks the batch to the per-index buffer capacity so a forced
-        maintenance pass (emptying the destination buffers) always makes the
-        retry succeed — ingestion cannot silently drop or livelock.
-        """
-        xb = np.asarray(xb, np.float32)
-        ids = np.arange(self.n_total, self.n_total + len(xb), dtype=np.int64)
-        self._x_parts.append(xb)
-        self.n_total += len(xb)
-        self._x_cache = None
-        for lo in range(0, len(xb), self.capacity):
-            self._ingest_chunk(xb[lo : lo + self.capacity], ids[lo : lo + self.capacity])
-        return ids
-
-    def _ingest_chunk(self, xc: np.ndarray, ic: np.ndarray) -> None:
-        # Termination argument: a round that rejects any point force-rebuilds
-        # every rejecting index, emptying its buffer into the main structure.
-        # A retried point (chunk size <= buffer capacity) can only be
-        # rejected again by re-routing to a DIFFERENT still-full buffer, and
-        # each round empties at least one of those — so at most n_indexes
-        # rounds before every point is accepted.  Retries flip the ``valid``
-        # mask instead of slicing the batch, so every round reuses one
-        # compiled ingest program (shapes never depend on the reject count).
-        xj, ij = jnp.asarray(xc), jnp.asarray(ic)
-        pending = np.ones(len(xc), bool)
-        for _ in range(self.forest.n_indexes + 1):
-            self.delta, acc = ingest(
-                self.device, self.delta, xj, ij, valid=jnp.asarray(pending)
-            )
-            pending &= ~np.asarray(acc)
-            if not pending.any():
-                return
-            # capacity hit: force-rebuild the rejecting indexes, retry rest
-            meta = pull_delta_meta(self.delta)
-            full = [i for i in range(self.forest.n_indexes) if meta["dropped"][i] > 0]
-            self._rebuild(full)
-        raise RuntimeError(
-            "ingest chunk still rejected after rebuilding every full index — "
-            "invariant violation, please report"
-        )
-
-    # --- read path ----------------------------------------------------------
     def search(self, q, *, k: int, mode: str = "forest", beam: int = 1,
                kernel: bool = True):
-        """kNN over main forest + delta (core.knn.knn_search two-phase)."""
-        return knn_search(
-            self.device, jnp.asarray(q, jnp.float32), k=k, mode=mode, beam=beam,
-            kernel=kernel, delta=delta_view(self.delta),
-        )
+        """Device triple (dists, ids, SearchStats) — the legacy return."""
+        return self._ix._search_device(q, k=k, mode=mode, beam=beam, kernel=kernel)
 
-    # --- maintenance --------------------------------------------------------
     def check(self) -> DriftReport:
-        """Drift evaluation only (no rebuild)."""
-        x = self.x_all if self.maint_cfg.method == "obm" else None
-        return self.monitor.check(self.delta, x=x)
+        return self._ix.check()
 
     def maintain(self) -> DriftReport:
-        """Run the monitor; rebuild + hot-swap every triggered index."""
-        report = self.check()
-        if report.triggers:
-            self._rebuild(report.triggers, report)
-        return report
+        return self._ix.maintain()
 
-    def _rebuild(self, triggers: list[int], report: DriftReport | None = None) -> None:
-        if not triggers:
-            return
-        x_all = self.x_all
-        new_forest, stats = rebuild_indexes(
-            self.forest, self.delta, x_all, triggers, self.maint_cfg
-        )
-        # Survivors — delta members of indexes NOT rebuilt — keep their
-        # original buffers wholesale: a kept index keeps its center, so the
-        # old buffer's pivot/radius bound is still valid verbatim.  A pure
-        # device-side select (no host round-trip, no re-routing) that BY
-        # CONSTRUCTION cannot overflow: each kept buffer moves into a fresh
-        # buffer of the same capacity.  Rebuilt indexes start empty (their
-        # members were absorbed into the new trees); ``dropped`` resets —
-        # rejected points were never stored and their owners retry them.
-        new_device = device_forest(new_forest)
-        fresh = alloc_delta(new_forest, self.capacity)
-        keep = np.ones(self.forest.n_indexes, bool)
-        keep[list(triggers)] = False
-        n_migrated = int(np.asarray(self.delta.count)[keep].sum())
-        kj = jnp.asarray(keep)
-        old = self.delta
-        new_delta = fresh._replace(
-            x=jnp.where(kj[:, None, None], old.x, fresh.x),
-            ids=jnp.where(kj[:, None], old.ids, fresh.ids),
-            count=jnp.where(kj, old.count, fresh.count),
-            pivot=jnp.where(kj[:, None], old.pivot, fresh.pivot),
-            radius=jnp.where(kj, old.radius, fresh.radius),
-            sum_x=jnp.where(kj[:, None], old.sum_x, fresh.sum_x),
-        )
-
-        # ---- atomic swap: a query sees the old pair or the new pair --------
-        self.forest, self.device, self.delta = new_forest, new_device, new_delta
-        self.monitor = OverlapMonitor(
-            new_forest, self.maint_cfg,
-            x=x_all if self.maint_cfg.method == "obm" else None,
-        )
-        stats["triggers"] = list(triggers)
-        stats["reasons"] = dict(report.reasons) if report is not None else {}
-        stats["n_migrated"] = n_migrated
-        self.rebuild_log.append(stats)
-
-    # --- introspection ------------------------------------------------------
     def structure(self) -> dict[str, Any]:
-        """aggregate_structure + live delta occupancy (always fresh)."""
-        s = self.forest.aggregate_structure()
-        s["delta_fill"] = np.asarray(self.delta.count).tolist()
-        s["delta_capacity"] = self.capacity
-        s["n_objects"] = self.n_total
-        s["rebuilds"] = self.forest.build_stats.get("rebuilds", 0)
-        return s
+        return self._ix.structure()
+
+    # --- legacy attribute surface -------------------------------------------
+    @property
+    def forest(self) -> ForestArrays:
+        return self._ix.forest
+
+    @property
+    def device(self):
+        return self._ix.device
+
+    @property
+    def delta(self) -> DeltaBuffer:
+        return self._ix.delta
+
+    @property
+    def monitor(self) -> OverlapMonitor:
+        return self._ix.monitor
+
+    @property
+    def capacity(self) -> int:
+        return self._ix.capacity
+
+    @property
+    def build_report(self):
+        return self._ix.build_report
+
+    @property
+    def rebuild_log(self) -> list[dict[str, Any]]:
+        return self._ix.rebuild_log
+
+    @property
+    def x_all(self) -> np.ndarray:
+        return self._ix.x_all
+
+    @property
+    def n_total(self) -> int:
+        return self._ix.n_total

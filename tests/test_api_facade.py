@@ -1,0 +1,380 @@
+"""OverlapIndex facade tests: config-tree validation, overlap-method
+registry, plan-cache re-trace behavior, save/load bitwise round-trip, the
+baseline pivot-method contract, and the shim-deprecation gate (shim usage
+inside src/repro itself fails the build)."""
+import re
+import warnings
+from pathlib import Path
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import (
+    Config,
+    ConfigError,
+    IndexConfig,
+    OverlapIndex,
+    RepoDeprecationWarning,
+    SearchConfig,
+    StreamConfig,
+    available_overlap_methods,
+    register_overlap_method,
+    unregister_overlap_method,
+)
+from repro.core import knn_exact
+from repro.core.overlap import overlap_matrix
+from repro.core.pipeline import build_baseline_core
+
+CFG = Config(
+    index=IndexConfig(method="vbm", eps=1.5, min_pts=8, xi_min=0.3, xi_max=0.7),
+    stream=StreamConfig(capacity=128),
+)
+
+
+@pytest.fixture(scope="module")
+def built(blob_data):
+    return OverlapIndex.build(blob_data, CFG)
+
+
+def _stream_points(x, n, seed):
+    g = np.random.default_rng(seed)
+    base = x[g.choice(len(x), n)]
+    return (base + 0.3 * g.normal(size=base.shape)).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# config tree validation
+# ---------------------------------------------------------------------------
+
+BAD_CONFIGS = [
+    (lambda: IndexConfig(method="vbmm"), "registered overlap method"),
+    (lambda: IndexConfig(xi_min=0.8, xi_max=0.4), "xi_min < xi_max"),
+    (lambda: IndexConfig(xi_min=-0.1), "xi_min < xi_max"),
+    (lambda: IndexConfig(xi_max=1.5), "xi_min < xi_max"),
+    (lambda: IndexConfig(eps=0.0), "eps"),
+    (lambda: IndexConfig(min_pts=0), "min_pts"),
+    (lambda: IndexConfig(c_max=1), "c_max"),
+    (lambda: IndexConfig(pivot_method="median"), "pivot_method"),
+    (lambda: IndexConfig(dbscan_block=0), "dbscan_block"),
+    (lambda: SearchConfig(k=0), "k="),
+    (lambda: SearchConfig(mode="fast"), "mode"),
+    (lambda: SearchConfig(beam=0), "beam"),
+    (lambda: StreamConfig(capacity=0), "capacity"),
+    (lambda: StreamConfig(monitor_method="learned"), "registered overlap method"),
+    (lambda: StreamConfig(xi_rebuild=0.0), "xi_rebuild"),
+    (lambda: StreamConfig(xi_rebuild=1.5), "xi_rebuild"),
+    (lambda: StreamConfig(drift_margin=-0.1), "drift_margin"),
+    (lambda: StreamConfig(fill_rebuild=0.0), "fill_rebuild"),
+    (lambda: StreamConfig(pivot_method="median"), "pivot_method"),
+    (lambda: StreamConfig(c_max=1), "c_max"),
+]
+
+
+@pytest.mark.parametrize("bad, fragment", BAD_CONFIGS,
+                         ids=[f[1] + str(i) for i, f in enumerate(BAD_CONFIGS)])
+def test_config_validation_is_actionable(bad, fragment):
+    with pytest.raises(ConfigError) as exc:
+        bad()
+    assert fragment in str(exc.value)
+
+
+def test_config_nodes_are_type_checked():
+    with pytest.raises(ConfigError, match="Config.index"):
+        Config(index=SearchConfig())
+
+
+def test_config_valid_tree_constructs():
+    cfg = Config(
+        index=IndexConfig(method="obm", c_max=None),
+        search=SearchConfig(k=3, mode="all", beam=4),
+        stream=StreamConfig(capacity=None, drift_margin=0.1),
+    )
+    assert cfg.with_(eps=2.0).index.eps == 2.0
+
+
+# ---------------------------------------------------------------------------
+# overlap-method registry
+# ---------------------------------------------------------------------------
+
+def test_registry_lists_paper_methods():
+    assert set(available_overlap_methods()) >= {"vbm", "dbm", "obm"}
+
+
+def test_registered_method_flows_through_whole_pipeline(blob_data):
+    """A custom heuristic becomes buildable + monitorable by NAME — no
+    dispatch site anywhere needs touching."""
+
+    def hybrid(pivots, radii, *, x=None, assign=None):
+        v = overlap_matrix("vbm", pivots, radii)
+        d = overlap_matrix("dbm", pivots, radii)
+        return 0.5 * (v + d)
+
+    register_overlap_method("hybrid-vd", hybrid)
+    try:
+        cfg = Config(
+            index=IndexConfig(method="hybrid-vd", eps=1.5, min_pts=8),
+            stream=StreamConfig(monitor_method="hybrid-vd", capacity=64),
+        )
+        ix = OverlapIndex.build(blob_data, cfg)
+        assert ix.forest.n_indexes >= 1
+        ix.ingest(_stream_points(blob_data, 16, seed=0))
+        rep = ix.check()  # the monitor resolves the same registry entry
+        assert np.isfinite(rep.rates).all()
+    finally:
+        unregister_overlap_method("hybrid-vd")
+    with pytest.raises(ConfigError, match="hybrid-vd"):
+        IndexConfig(method="hybrid-vd")
+
+
+def test_registry_duplicate_and_unknown():
+    with pytest.raises(ValueError, match="already registered"):
+        register_overlap_method("vbm", lambda *a, **k: None)
+    with pytest.raises(ValueError, match="registered methods"):
+        overlap_matrix("nope", jnp.zeros((2, 3)), jnp.ones((2,)))
+
+
+# ---------------------------------------------------------------------------
+# plan cache: no re-trace on stable shapes
+# ---------------------------------------------------------------------------
+
+def test_search_plan_cache_never_retraces_stable_shapes(built, rng):
+    ix = built
+    q = rng.normal(size=(16, 8)).astype(np.float32) * 8
+    r1 = ix.search(q, k=9)
+    plan = r1.plan
+    assert plan.traces == 1 and len(ix.plans) >= 1
+    for _ in range(3):
+        r = ix.search(q, k=9)
+    assert r.plan is plan
+    assert plan.traces == 1, "same options + same shapes must not re-trace"
+    assert plan.calls >= 4
+    assert ix.plans.hits >= 3
+
+    # a different option tuple is a DIFFERENT plan, original stays warm
+    r2 = ix.search(q, k=5, mode="all")
+    assert r2.plan is not plan and r2.plan.traces == 1
+    assert plan.traces == 1
+
+    # a new batch shape re-specializes within the plan (counted, cached)
+    ix.search(q[:7], k=9)
+    assert plan.traces == 2
+    ix.search(q[:7], k=9)
+    assert plan.traces == 2
+
+
+def test_search_overrides_are_validated(built, rng):
+    """Per-call k/mode/beam get the same actionable errors as the config
+    tree — and a bad combination never poisons the plan cache."""
+    q = rng.normal(size=(4, 8)).astype(np.float32)
+    n_plans = len(built.plans)
+    with pytest.raises(ConfigError, match="k=0"):
+        built.search(q, k=0)
+    with pytest.raises(ConfigError, match="beam=0"):
+        built.search(q, k=3, beam=0)
+    with pytest.raises(ConfigError, match="mode"):
+        built.search(q, k=3, mode="fast")
+    assert len(built.plans) == n_plans
+
+
+def test_search_result_matches_legacy_tuple(built, rng):
+    """SearchResult (facade) must agree with the legacy shim output."""
+    from repro.core import knn_search_host
+
+    ix = built
+    q = rng.normal(size=(8, 8)).astype(np.float32) * 8
+    res = ix.search(q, k=7, mode="all")
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", RepoDeprecationWarning)
+        d, i, s = knn_search_host(ix.forest, q, k=7, mode="all")
+    np.testing.assert_array_equal(res.dists, d)
+    np.testing.assert_array_equal(res.ids, i)
+    assert res.stats["steps"] == s["steps"]
+    d2, i2, s2 = res  # tuple-unpacking compatibility
+    assert d2 is res.dists and i2 is res.ids
+
+
+# ---------------------------------------------------------------------------
+# persistence: build -> ingest -> save -> load is bitwise-identical
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("quantize", [False, True])
+def test_save_load_roundtrip_bitwise(blob_data, rng, tmp_path, quantize):
+    cfg = Config(
+        index=IndexConfig(method="vbm", eps=1.5, min_pts=8,
+                          xi_min=0.3, xi_max=0.7),
+        search=SearchConfig(quantize=quantize),
+        stream=StreamConfig(capacity=128),
+    )
+    ix = OverlapIndex.build(blob_data, cfg)
+    ix.ingest(_stream_points(blob_data, 200, seed=3))  # live delta buffers
+    q = rng.normal(size=(24, 8)).astype(np.float32) * 8
+
+    path = ix.save(tmp_path / f"index_q{int(quantize)}")
+    ix2 = OverlapIndex.load(path)
+
+    assert ix2.cfg == ix.cfg
+    assert ix2.n_total == ix.n_total
+    np.testing.assert_array_equal(
+        np.asarray(ix2.delta.ids), np.asarray(ix.delta.ids)
+    )
+    # the drift monitor's baseline is the SAVED one, not a recompute over
+    # the restart-time dataset (object-based triggers must not shift)
+    np.testing.assert_array_equal(
+        ix2.monitor.rates_baseline, ix.monitor.rates_baseline
+    )
+    np.testing.assert_array_equal(
+        np.asarray(ix2.device.bucket_x), np.asarray(ix.device.bucket_x)
+    )
+    for k, mode in ((12, "all"), (5, "forest")):
+        a = ix.search(q, k=k, mode=mode)
+        b = ix2.search(q, k=k, mode=mode)
+        np.testing.assert_array_equal(a.dists, b.dists)
+        np.testing.assert_array_equal(a.ids, b.ids)
+        for field in ("buckets_visited", "distances", "comparisons"):
+            np.testing.assert_array_equal(a.stats[field], b.stats[field])
+
+    # the loaded index is fully alive: ingest + maintain + structure work
+    ix2.ingest(_stream_points(blob_data, 32, seed=4))
+    ix2.maintain()
+    s = ix2.structure()
+    assert s["n_objects"] == ix2.n_total == len(blob_data) + 232
+    # and exactness holds over everything ever ingested (int8 bucket
+    # storage is deliberately approximate: ~0.5% distance error)
+    tol = 1e-2 if quantize else 1e-4
+    d = ix2.search(q, k=10, mode="all").dists
+    de, _ = knn_exact(jnp.asarray(ix2.x_all), jnp.asarray(q), k=10)
+    np.testing.assert_allclose(d, np.asarray(de), rtol=tol, atol=tol)
+
+
+def test_load_refuses_newer_format(built, tmp_path):
+    from repro.api import persist
+
+    path = built.save(tmp_path / "v.npz")
+    with np.load(path, allow_pickle=False) as z:
+        payload = dict(z)
+    payload["format_version"] = np.int64(persist.FORMAT_VERSION + 1)
+    np.savez(path, **payload)
+    with pytest.raises(ValueError, match="newer format"):
+        OverlapIndex.load(path)
+
+
+# ---------------------------------------------------------------------------
+# baseline pivot-method contract (was: silently hardcoded 'kmeans')
+# ---------------------------------------------------------------------------
+
+def test_baseline_honors_pivot_method_and_warns():
+    x = np.random.default_rng(0).normal(size=(300, 5)).astype(np.float32)
+    # no config -> the documented 2-means baseline, no warning
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", UserWarning)
+        f_km, rep_km = build_baseline_core(x, None)
+    assert rep_km.config.pivot_method == "kmeans"
+    # explicit non-kmeans config is honored (cheaper GH build) + warned
+    with pytest.warns(UserWarning, match="BCCF baseline"):
+        f_gh, rep_gh = build_baseline_core(x, IndexConfig(pivot_method="gh"))
+    assert rep_gh.config.pivot_method == "gh"
+    assert rep_gh.tree_distances < rep_km.tree_distances, (
+        "gh pivots must actually be used (2-means costs strictly more)"
+    )
+    # explicit kmeans: honored, silent
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", UserWarning)
+        build_baseline_core(x, IndexConfig(pivot_method="kmeans"))
+
+
+# ---------------------------------------------------------------------------
+# deprecation gate: shims warn; src/repro itself must never hit them
+# ---------------------------------------------------------------------------
+
+def test_shims_emit_repo_deprecation_warning(blob_data):
+    from repro.core import build_baseline, build_index, knn_search
+    from repro.core.knn import device_forest
+    from repro.stream import StreamingForest
+
+    x = blob_data[:400]
+    with pytest.warns(RepoDeprecationWarning, match="build_index"):
+        forest, _ = build_index(
+            x, IndexConfig(method="vbm", eps=1.5, min_pts=8))
+    with pytest.warns(RepoDeprecationWarning, match="knn_search"):
+        knn_search(device_forest(forest), jnp.asarray(x[:4]), k=3)
+    with pytest.warns(RepoDeprecationWarning, match="build_baseline"):
+        build_baseline(x)
+    with pytest.warns(RepoDeprecationWarning, match="StreamingForest"):
+        StreamingForest(x, IndexConfig(method="vbm", eps=1.5, min_pts=8))
+
+
+def test_facade_lifecycle_emits_no_deprecation(blob_data, tmp_path):
+    """The whole facade surface — build, search, ingest, maintain, save,
+    load, to_datastore — must run clean of RepoDeprecationWarning: internal
+    code going through a shim fails here (and thereby fails CI)."""
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", RepoDeprecationWarning)
+        ix = OverlapIndex.build(blob_data, CFG)
+        ix.search(blob_data[:4], k=3)
+        ix.ingest(_stream_points(blob_data, 150, seed=5))
+        ix.search(blob_data[:4], k=3, mode="all")
+        ix.maintain()
+        path = ix.save(tmp_path / "clean")
+        ix2 = OverlapIndex.load(path)
+        ix2.search(blob_data[:4], k=3)
+        ds = ix2.to_datastore(
+            np.arange(ix2.n_total, dtype=np.int32) % 50, stream_capacity=16
+        )
+        # serve-side read+write paths too
+        from repro.serve.retrieval import forest_knn, ingest_keys
+
+        d2, vals = forest_knn(jnp.asarray(blob_data[:4]), ds, 3)
+        assert vals.shape == (4, 3)
+        ds, acc = ingest_keys(
+            ds, jnp.asarray(_stream_points(blob_data, 4, seed=6)),
+            jnp.arange(4, dtype=jnp.int32),
+        )
+        assert acc > 0
+        baseline = OverlapIndex.baseline(blob_data[:300])
+        baseline.search(blob_data[:4], k=3, mode="all")
+
+
+def test_no_shim_usage_inside_src_repro():
+    """Static gate: the deprecated surfaces may be CALLED only by their own
+    defining modules; everything else under src/repro goes through the
+    facade or the *_core/_impl entry points."""
+    src = Path(__file__).resolve().parent.parent / "src" / "repro"
+    allowed = {"core/pipeline.py", "core/knn.py", "stream/maintenance.py"}
+    pat = re.compile(
+        r"\b(build_index|build_baseline|knn_search_host|knn_search|"
+        r"StreamingForest)\s*\("
+    )
+    offenders = []
+    for path in sorted(src.rglob("*.py")):
+        rel = path.relative_to(src).as_posix()
+        if rel in allowed:
+            continue
+        for ln, line in enumerate(path.read_text().splitlines(), 1):
+            if pat.search(line):
+                offenders.append(f"{rel}:{ln}: {line.strip()}")
+    assert not offenders, (
+        "deprecated shim usage inside src/repro (use repro.api.OverlapIndex "
+        "or the *_core/_impl functions):\n" + "\n".join(offenders)
+    )
+
+
+# ---------------------------------------------------------------------------
+# to_datastore contract
+# ---------------------------------------------------------------------------
+
+def test_to_datastore_checks_value_count(built):
+    with pytest.raises(ValueError, match="one value per indexed object"):
+        built.to_datastore(np.zeros(3, np.int32))
+
+
+def test_to_datastore_carries_live_delta(blob_data):
+    ix = OverlapIndex.build(blob_data, CFG)
+    xs = _stream_points(blob_data, 8, seed=7)
+    ids = ix.ingest(xs)
+    vals = (np.arange(ix.n_total) % 97).astype(np.int32)
+    ds = ix.to_datastore(vals)
+    from repro.serve.retrieval import forest_knn
+
+    _, got = forest_knn(jnp.asarray(xs), ds, 1)
+    np.testing.assert_array_equal(np.asarray(got)[:, 0], vals[ids])
