@@ -9,8 +9,30 @@ the timed pass hit the same compiled executor.
 ``--smoke`` shrinks datasets and the k sweep for CI; the artifact
 (BENCH_search.json) is written either way so the perf trajectory stays
 diffable across commits.
+
+``--shards N`` runs the sweep under the sharded device layout (forest
+bucket rows + delta buffers split over N devices, one shard_map island per
+search) and HARD-GATES on divergence: every sharded result is compared
+bitwise against the single-device layout on the same forest — any mismatch
+exits non-zero.  On CPU the flag also forces a host mesh by setting
+``XLA_FLAGS=--xla_force_host_platform_device_count=N`` before jax
+initializes, so ``python -m benchmarks.bench_search --smoke --shards 4``
+works on a laptop/CI runner with no extra environment.
 """
 from __future__ import annotations
+
+import os
+import sys
+
+# Must run before ANY jax import (jax reads XLA_FLAGS once at init): give
+# the process enough host devices for the requested shard count.
+if "--shards" in sys.argv:
+    _n = int(sys.argv[sys.argv.index("--shards") + 1])
+    _flags = os.environ.get("XLA_FLAGS", "")
+    if _n > 1 and "xla_force_host_platform_device_count" not in _flags:
+        os.environ["XLA_FLAGS"] = (
+            f"{_flags} --xla_force_host_platform_device_count={_n}".strip()
+        )
 
 import time
 
@@ -55,30 +77,63 @@ def run(
     kernel: bool = True,
     quantize: bool = False,
     smoke: bool = False,
+    shards: int = 1,
 ) -> None:
     """``kernel`` routes all search distances through the kernels/ops
     dispatch layer (fused Pallas bucket scan on TPU); ``quantize`` stores
     bucket members int8 on device.  Recall is reported either way, so the
-    kernelized path's exactness (mode='all' vs brute force) is visible."""
+    kernelized path's exactness (mode='all' vs brute force) is visible.
+
+    ``shards > 1`` runs the sweep under the sharded layout and compares
+    every result bitwise against a single-device index built over the same
+    dataset (builds are deterministic, so the forests are identical) —
+    divergence is a hard failure, not a warning.
+    """
     k_values = K_VALUES_SMOKE if smoke else K_VALUES
+    diverged: list[str] = []
     for ds in load_datasets(full, smoke=smoke):
         q = _queries(ds.x, N_QUERIES)
         de, ie = knn_exact(jnp.asarray(ds.x), jnp.asarray(q), k=max(k_values))
         ie = np.asarray(ie)
         indexes = {
             method: OverlapIndex.build(
-                ds.x, facade_config(ds, method, kernel=kernel, quantize=quantize)
+                ds.x, facade_config(
+                    ds, method, shards=shards, kernel=kernel, quantize=quantize
+                )
             )
             for method in METHODS
         }
         indexes["bccf"] = OverlapIndex.baseline(
-            ds.x, baseline_config(ds, kernel=kernel, quantize=quantize)
+            ds.x, baseline_config(
+                ds, shards=shards, kernel=kernel, quantize=quantize
+            )
         )
+        refs = {}
+        if shards > 1:
+            # single-device references for the bitwise divergence gate
+            refs = {
+                method: OverlapIndex.build(
+                    ds.x, facade_config(
+                        ds, method, kernel=kernel, quantize=quantize
+                    )
+                )
+                for method in METHODS
+            }
+            refs["bccf"] = OverlapIndex.baseline(
+                ds.x, baseline_config(ds, kernel=kernel, quantize=quantize)
+            )
         for method, ix in indexes.items():
             mode = "all" if method == "bccf" else "forest"
             for k in k_values:
                 res, dt = _run_one(ix, q, k, mode)
                 stats = res.stats
+                if shards > 1:
+                    ref = refs[method].search(q, k=k, mode=mode)
+                    if not (
+                        np.array_equal(res.dists, ref.dists)
+                        and np.array_equal(res.ids, ref.ids)
+                    ):
+                        diverged.append(f"{ds.name}/{method}/k{k}")
                 recall = float(np.mean([
                     len(set(res.ids[i].tolist()) & set(ie[i, :k].tolist())) / k
                     for i in range(len(q))
@@ -94,7 +149,7 @@ def run(
                 emit(f"search/{ds.name}/{method}/k{k}", dt * 1e6 / len(q), derived)
                 record(
                     "search", f"{ds.name}/{method}/k{k}",
-                    dataset=ds.name, method=method, k=k,
+                    dataset=ds.name, method=method, k=k, shards=shards,
                     dist=float(stats["distances"].mean()),
                     bound_dist=float(stats["bound_distances"].mean()),
                     cmp=float(stats["comparisons"].mean()),
@@ -113,7 +168,13 @@ def run(
                  f"plan_cache={ix.plans.stats()}")
     write_artifact("search", meta=dict(
         full=full, smoke=smoke, kernel=kernel, quantize=quantize,
+        shards=shards,
     ))
+    if diverged:
+        raise SystemExit(
+            f"sharded search diverged from single-device on {len(diverged)} "
+            f"configurations: {', '.join(diverged)}"
+        )
 
 
 if __name__ == "__main__":
@@ -126,5 +187,9 @@ if __name__ == "__main__":
                     help="bypass kernels/ops dispatch (pure-jnp reference path)")
     ap.add_argument("--quantize", action="store_true",
                     help="int8 bucket member storage (device_forest knob)")
+    ap.add_argument("--shards", type=int, default=1,
+                    help="run under the sharded device layout (N devices on "
+                    "the 'model' axis) and hard-gate bitwise vs single")
     a = ap.parse_args()
-    run(full=a.full, kernel=not a.no_kernel, quantize=a.quantize, smoke=a.smoke)
+    run(full=a.full, kernel=not a.no_kernel, quantize=a.quantize,
+        smoke=a.smoke, shards=a.shards)

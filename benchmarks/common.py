@@ -12,7 +12,7 @@ import numpy as np
 
 sys.path.insert(0, "src")  # allow `python -m benchmarks.run` without install
 
-from repro.api import Config, IndexConfig, SearchConfig  # noqa: E402
+from repro.api import Config, IndexConfig, LayoutConfig, SearchConfig  # noqa: E402
 from repro.data.synthetic import tracking_like, ward_like  # noqa: E402
 
 METHODS = ("dbm", "obm", "vbm")
@@ -60,12 +60,27 @@ def index_config(ds: BenchDataset, method: str) -> IndexConfig:
     )
 
 
-def facade_config(ds: BenchDataset, method: str, **search) -> Config:
+def layout_config(shards: int = 1) -> LayoutConfig:
+    """Device layout for a bench run: single below 2 shards, else the
+    sharded island layout (the caller is responsible for forcing a host
+    mesh via XLA_FLAGS before jax initializes)."""
+    if shards <= 1:
+        return LayoutConfig()
+    return LayoutConfig(kind="sharded", shards=shards)
+
+
+def facade_config(
+    ds: BenchDataset, method: str, *, shards: int = 1, **search
+) -> Config:
     """Full Config tree for OverlapIndex.build over a bench dataset."""
-    return Config(index=index_config(ds, method), search=SearchConfig(**search))
+    return Config(
+        index=index_config(ds, method),
+        search=SearchConfig(**search),
+        layout=layout_config(shards),
+    )
 
 
-def baseline_config(ds: BenchDataset, **search) -> Config:
+def baseline_config(ds: BenchDataset, *, shards: int = 1, **search) -> Config:
     """BCCF baseline config: documented 'kmeans' pivot semantics, explicit
     so the honored-pivot warning never fires in benchmarks."""
     import dataclasses
@@ -73,6 +88,7 @@ def baseline_config(ds: BenchDataset, **search) -> Config:
     return Config(
         index=dataclasses.replace(index_config(ds, "vbm"), pivot_method="kmeans"),
         search=SearchConfig(**search),
+        layout=layout_config(shards),
     )
 
 

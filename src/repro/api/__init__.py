@@ -14,10 +14,12 @@ from repro.api.config import (
     Config,
     ConfigError,
     IndexConfig,
+    LayoutConfig,
     SearchConfig,
     StreamConfig,
     as_index_config,
 )
+from repro.api.executor import make_backend
 from repro.api.index import OverlapIndex
 from repro.api.plan import PlanCache, PlanKey, SearchPlan, SearchResult
 from repro.core.overlap import (
@@ -30,8 +32,8 @@ from repro.core.overlap import (
 from repro.deprecation import RepoDeprecationWarning
 
 __all__ = [
-    "Config", "ConfigError", "IndexConfig", "SearchConfig", "StreamConfig",
-    "as_index_config",
+    "Config", "ConfigError", "IndexConfig", "LayoutConfig", "SearchConfig",
+    "StreamConfig", "as_index_config", "make_backend",
     "OverlapIndex",
     "PlanCache", "PlanKey", "SearchPlan", "SearchResult",
     "OverlapMethod", "available_overlap_methods", "get_overlap_method",

@@ -21,6 +21,7 @@ from repro.core.pipeline import IndexConfig as _LegacyIndexConfig
 
 PIVOT_METHODS = ("gh", "kmeans")
 SEARCH_MODES = ("forest", "all")
+DEVICE_LAYOUTS = ("single", "sharded")
 
 
 class ConfigError(ValueError):
@@ -163,6 +164,46 @@ class StreamConfig:
 
 
 @dataclass(frozen=True)
+class LayoutConfig:
+    """Device layout of the executor layer (repro.api.executor).
+
+    ``kind='single'`` (default) keeps the whole forest + delta on one
+    device — the behavior every prior release had.  ``kind='sharded'``
+    splits the bucket rows and delta buffers over the first ``shards``
+    local devices along the ``axis`` mesh axis and runs searches/ingests
+    inside one ``shard_map`` island (distributed/knn_island.py) — results
+    stay bitwise-identical to the single layout.
+    """
+
+    kind: str = "single"  # single | sharded
+    shards: int | None = None  # sharded: device count; None -> all local
+    axis: str = "model"  # mesh axis name the rows shard over
+
+    def __post_init__(self) -> None:
+        _require(
+            self.kind in DEVICE_LAYOUTS,
+            f"LayoutConfig.kind={self.kind!r} is unknown; choose 'single' "
+            "(one device, the default) or 'sharded' (bucket rows + delta "
+            "buffers split over the model axis)",
+        )
+        _require(
+            self.shards is None or self.shards >= 1,
+            f"LayoutConfig.shards={self.shards} must be >= 1 or None "
+            "(None uses every local device under kind='sharded')",
+        )
+        _require(
+            self.kind == "sharded" or self.shards is None,
+            f"LayoutConfig.shards={self.shards} only applies to "
+            "kind='sharded' (the single layout always uses one device)",
+        )
+        _require(
+            isinstance(self.axis, str) and len(self.axis) > 0,
+            f"LayoutConfig.axis={self.axis!r} must be a non-empty mesh "
+            "axis name (the serving mesh calls it 'model')",
+        )
+
+
+@dataclass(frozen=True)
 class Config:
     """The whole lifecycle in one immutable tree.  ``dataclasses.replace``
     (or the ``.with_()`` convenience) derives variants."""
@@ -170,12 +211,14 @@ class Config:
     index: IndexConfig = field(default_factory=IndexConfig)
     search: SearchConfig = field(default_factory=SearchConfig)
     stream: StreamConfig = field(default_factory=StreamConfig)
+    layout: LayoutConfig = field(default_factory=LayoutConfig)
 
     def __post_init__(self) -> None:
         for name, want in (
             ("index", IndexConfig),
             ("search", SearchConfig),
             ("stream", StreamConfig),
+            ("layout", LayoutConfig),
         ):
             got = getattr(self, name)
             if not isinstance(got, want):

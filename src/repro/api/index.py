@@ -28,6 +28,7 @@ from __future__ import annotations
 
 from typing import Any
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -37,11 +38,13 @@ from repro.api.config import (
     Config,
     ConfigError,
     IndexConfig,
+    LayoutConfig,
     as_index_config,
 )
+from repro.api.executor import make_backend
 from repro.api.plan import PlanCache, PlanKey, SearchResult, stats_to_host
 from repro.core.forest import ForestArrays
-from repro.core.knn import DeviceForest, SearchStats, device_forest
+from repro.core.knn import DeviceForest, SearchStats
 from repro.core.overlap import get_overlap_method
 from repro.core.pipeline import (
     BuildReport,
@@ -54,7 +57,6 @@ from repro.stream.ingest import (
     DeltaBuffer,
     alloc_delta,
     delta_view,
-    ingest,
     pull_delta_meta,
 )
 
@@ -104,11 +106,13 @@ class OverlapIndex:
         capacity: int | None = None,
         rebuild_log: list[dict[str, Any]] | None = None,
         monitor_baseline: np.ndarray | None = None,
+        clamp_layout: bool = False,
     ) -> "OverlapIndex":
         self = object.__new__(cls)
         self.cfg = cfg
         self.forest = forest
         self.build_report = report
+        self.backend = make_backend(cfg.layout, clamp=clamp_layout)
         self._x_parts: list[np.ndarray] = [x]
         self._x_cache: np.ndarray | None = x
         self.n_total = len(x) if n_total is None else n_total
@@ -118,7 +122,14 @@ class OverlapIndex:
             or cfg.stream.capacity
             or default_delta_capacity(self.n_total)
         )
-        self.delta: DeltaBuffer | None = delta
+        # backend-resident buffers (padded + sharded under the sharded
+        # layout); every host-facing consumer reads the .delta property
+        self._delta: DeltaBuffer | None = (
+            None if delta is None else self.backend.place_delta(delta)
+        )
+        self._ingest_exec = None  # lazy jitted ingest (see _ingest_executor)
+        self._ingest_traces = 0
+        self._ingest_calls = 0
         self.monitor = None
         if delta is not None:
             self.monitor = self._make_monitor()
@@ -171,17 +182,36 @@ class OverlapIndex:
 
     @property
     def device(self) -> DeviceForest:
-        """Device upload of the forest, quantized per ``cfg.search``.
+        """Device upload of the forest, quantized per ``cfg.search`` and
+        placed per ``cfg.layout`` (sharded bucket rows under the sharded
+        backend).
 
         Lazy: host-only consumers (build reports, structure rollups, the
         construction benchmarks) never pay the upload — and build wall time
         measures the build, not the transfer.  First search/ingest uploads.
         """
         if self._device is None:
-            self._device = device_forest(
+            self._device = self.backend.upload_forest(
                 self.forest, quantize=self.cfg.search.quantize
             )
         return self._device
+
+    @property
+    def delta(self) -> DeltaBuffer | None:
+        """LOGICAL (unpadded) view of the streaming delta buffers — what the
+        drift monitor, persistence, and introspection consume.  Identical to
+        the device-resident buffers under the single layout; the sharded
+        layout slices off the shard-alignment pad rows."""
+        if self._delta is None:
+            return None
+        return self.backend.logical_delta(self._delta, self.forest.n_indexes)
+
+    @property
+    def device_delta(self) -> DeltaBuffer | None:
+        """Backend-resident delta buffers exactly as the executors see them
+        (padded + sharded under the sharded layout) — the serving datastore
+        rides on these so its searches reuse the same placement."""
+        return self._delta
 
     # -- read path: planner + cached executors -------------------------------
     def _plan_key(self, k, mode, beam, kernel) -> PlanKey:
@@ -195,7 +225,8 @@ class OverlapIndex:
             beam=sc.beam if beam is None else int(beam),
             kernel=sc.kernel if kernel is None else bool(kernel),
             quantize=sc.quantize,
-            delta_capacity=None if self.delta is None else self.capacity,
+            delta_capacity=None if self._delta is None else self.capacity,
+            shards=self.backend.shards,
         )
         if key.k < 1:
             raise ConfigError(f"search k={key.k} must be >= 1 neighbors")
@@ -218,9 +249,9 @@ class OverlapIndex:
 
     def _search_planned(self, q, *, k=None, mode=None, beam=None, kernel=None):
         key = self._plan_key(k, mode, beam, kernel)
-        plan = self.plans.plan(key)
+        plan = self.plans.plan(key, self.backend)
         plan.calls += 1
-        delta = None if self.delta is None else delta_view(self.delta)
+        delta = None if self._delta is None else delta_view(self._delta)
         d, i, s = plan.executor(self.device, jnp.asarray(q, jnp.float32), delta)
         return d, i, s, plan
 
@@ -242,9 +273,43 @@ class OverlapIndex:
 
     # -- write path ----------------------------------------------------------
     def _ensure_delta(self) -> None:
-        if self.delta is None:
-            self.delta = alloc_delta(self.forest, self.capacity)
+        if self._delta is None:
+            self._delta = self.backend.place_delta(
+                alloc_delta(self.forest, self.capacity)
+            )
             self.monitor = self._make_monitor()
+
+    def _ingest_executor(self):
+        """One jitted ingest program per index, wrapping the backend's body
+        with a trace counter (the ingest twin of ``api.plan.SearchPlan``).
+        The jit cache keys on (centers shape, delta shapes, batch shape) —
+        all stable across rebuilds and, with ``_pad_batch``, across ragged
+        tail chunks — so steady-state streaming never re-traces."""
+        if self._ingest_exec is None:
+            body = self.backend.ingest_body()
+
+            def _impl(centers, delta, xb, ids, valid):
+                self._ingest_traces += 1  # runs only while jax traces
+                return body(centers, delta, xb, ids, valid)
+
+            self._ingest_exec = jax.jit(_impl)
+        return self._ingest_exec
+
+    def _pad_batch(self, n: int) -> int:
+        """Padded chunk length: next power of two, clamped to the chunk
+        ceiling (the delta capacity).  Bounds the number of compiled ingest
+        shapes at log2(capacity) while wasting < 2x lanes on ragged tails —
+        pad rows ride the ``valid`` parking mechanism (accepted upfront,
+        stored nowhere)."""
+        p = 1
+        while p < n:
+            p <<= 1
+        return min(p, self.capacity)
+
+    def ingest_stats(self) -> dict[str, int]:
+        """Observability for the write path: compiled-trace and call
+        counters of the jitted ingest executor (tests assert no-retrace)."""
+        return dict(traces=self._ingest_traces, calls=self._ingest_calls)
 
     def _make_monitor(self):
         from repro.stream.maintenance import OverlapMonitor
@@ -299,13 +364,25 @@ class OverlapIndex:
         # rejected again by re-routing to a DIFFERENT still-full buffer, and
         # each round empties at least one of those — so at most n_indexes
         # rounds before every point is accepted.  Retries flip the ``valid``
-        # mask instead of slicing the batch, so every round reuses one
-        # compiled ingest program (shapes never depend on the reject count).
+        # mask instead of slicing the batch, and ragged tail chunks pad up to
+        # a power-of-two shape with rows parked invalid, so every round (and
+        # every steady-state batch) reuses one compiled ingest program.
+        b = len(xc)
+        bp = self._pad_batch(b)
+        if bp > b:
+            xc = np.concatenate(
+                [xc, np.zeros((bp - b, xc.shape[1]), xc.dtype)]
+            )
+            ic = np.concatenate([ic, np.full((bp - b,), -1, ic.dtype)])
+        pending = np.zeros(bp, bool)
+        pending[:b] = True
         xj, ij = jnp.asarray(xc), jnp.asarray(ic)
-        pending = np.ones(len(xc), bool)
+        run = self._ingest_executor()
         for _ in range(self.forest.n_indexes + 1):
-            self.delta, acc = ingest(
-                self.device, self.delta, xj, ij, valid=jnp.asarray(pending)
+            self._ingest_calls += 1
+            self._delta, acc = run(
+                self.device.index_centers, self._delta, xj, ij,
+                jnp.asarray(pending),
             )
             pending &= ~np.asarray(acc)
             if not pending.any():
@@ -356,24 +433,30 @@ class OverlapIndex:
         # buffer of the same capacity.  Rebuilt indexes start empty (their
         # members were absorbed into the new trees); ``dropped`` resets —
         # rejected points were never stored and their owners retry them.
-        new_device = device_forest(new_forest, quantize=self.cfg.search.quantize)
+        new_device = self.backend.upload_forest(
+            new_forest, quantize=self.cfg.search.quantize
+        )
         fresh = alloc_delta(new_forest, self.capacity)
         keep = np.ones(self.forest.n_indexes, bool)
         keep[list(triggers)] = False
-        n_migrated = int(np.asarray(self.delta.count)[keep].sum())
+        old = self.delta  # logical view: survivor select is index-aligned
+        n_migrated = int(np.asarray(old.count)[keep].sum())
         kj = jnp.asarray(keep)
-        old = self.delta
-        new_delta = fresh._replace(
+        new_delta = self.backend.place_delta(fresh._replace(
             x=jnp.where(kj[:, None, None], old.x, fresh.x),
             ids=jnp.where(kj[:, None], old.ids, fresh.ids),
             count=jnp.where(kj, old.count, fresh.count),
             pivot=jnp.where(kj[:, None], old.pivot, fresh.pivot),
             radius=jnp.where(kj, old.radius, fresh.radius),
             sum_x=jnp.where(kj[:, None], old.sum_x, fresh.sum_x),
-        )
+        ))
 
         # ---- atomic swap: a query sees the old pair or the new pair --------
-        self.forest, self._device, self.delta = new_forest, new_device, new_delta
+        # per-shard barrier first: under the sharded layout every shard's new
+        # arrays must be materialized before the swap becomes visible, so the
+        # hot swap stays atomic (single layout: no-op)
+        self.backend.barrier(new_device, new_delta)
+        self.forest, self._device, self._delta = new_forest, new_device, new_delta
         self.monitor = self._make_monitor()
         stats["triggers"] = list(triggers)
         stats["reasons"] = dict(report.reasons) if report is not None else {}
@@ -388,19 +471,32 @@ class OverlapIndex:
         return persist.save_state(self, path)
 
     @classmethod
-    def load(cls, path) -> "OverlapIndex":
-        """Rebuild-free restart from ``save`` output."""
+    def load(cls, path, *, layout: LayoutConfig | None = None) -> "OverlapIndex":
+        """Rebuild-free restart from ``save`` output.
+
+        Snapshots store LOGICAL (host, unpadded) state, so they are
+        layout-independent: ``layout`` re-shards the loaded index onto a
+        different device layout than it was saved under (searches stay
+        bitwise-identical).  Without an override the saved layout is used,
+        clamped to the devices this host actually has.
+        """
         st = persist.load_state(path)
+        cfg = st["cfg"]
+        if layout is not None:
+            from dataclasses import replace
+
+            cfg = replace(cfg, layout=layout)
         return cls._wire(
             np.asarray(st["x_all"], np.float32),
             st["forest"],
-            st["cfg"],
+            cfg,
             st["build_report"],
             n_total=st["n_total"],
             delta=st["delta"],
             capacity=st["capacity"],
             rebuild_log=st["rebuild_log"],
             monitor_baseline=st["monitor_baseline"],
+            clamp_layout=layout is None,
         )
 
     # -- serving -------------------------------------------------------------
@@ -440,6 +536,8 @@ class OverlapIndex:
         return (
             f"OverlapIndex(n={self.n_total}, indexes={self.forest.n_indexes}, "
             f"buckets={self.forest.n_buckets}, method={self.cfg.index.method!r}, "
-            f"delta={'on' if self.delta is not None else 'off'}, "
+            f"delta={'on' if self._delta is not None else 'off'}, "
+            f"layout={self.backend.kind}"
+            f"{f'x{self.backend.shards}' if self.backend.shards > 1 else ''}, "
             f"plans={len(self.plans)})"
         )

@@ -18,7 +18,13 @@ from typing import Any
 
 import numpy as np
 
-from repro.api.config import Config, IndexConfig, SearchConfig, StreamConfig
+from repro.api.config import (
+    Config,
+    IndexConfig,
+    LayoutConfig,
+    SearchConfig,
+    StreamConfig,
+)
 from repro.core.bccf import BuildCounters, FlatTree, TreeStructure
 from repro.core.forest import ForestArrays
 from repro.core.pipeline import BuildReport
@@ -158,6 +164,8 @@ def load_state(path) -> dict[str, Any]:
             index=IndexConfig(**cfg_d["index"]),
             search=SearchConfig(**cfg_d["search"]),
             stream=StreamConfig(**cfg_d["stream"]),
+            # absent in pre-layout (v1 era) snapshots -> single-device
+            layout=LayoutConfig(**cfg_d.get("layout", {})),
         )
 
         forest_arrays = {n: z[f"forest_{n}"] for n in _FOREST_ARRAYS}

@@ -6,12 +6,18 @@ and nobody could observe it.  The facade splits that into
 
   * ``PlanKey``     — the static options a compiled executor is specialized
                       on: ``(k, mode, beam, kernel, quantize, delta
-                      capacity)``;
-  * ``SearchPlan``  — the key plus a ``jax.jit``-wrapped closure over
-                      ``core.knn.knn_search_impl`` with those options baked
-                      in, and a *trace counter* (incremented only while
-                      tracing, so tests can assert "no re-trace");
-  * ``PlanCache``   — the per-index table of plans with hit/miss counters.
+                      capacity, shards)``;
+  * ``SearchPlan``  — the key plus a ``jax.jit``-wrapped closure over the
+                      layout backend's executor body (the single-device
+                      ``core.knn.knn_search_impl`` or the sharded
+                      ``distributed/knn_island.sharded_search`` island) with
+                      those options baked in, and a *trace counter*
+                      (incremented only while tracing, so tests can assert
+                      "no re-trace");
+  * ``PlanCache``   — the per-index table of plans with hit/miss counters,
+                      bounded by ``max_plans`` with LRU eviction (an
+                      unbounded cache leaked one compiled executor per
+                      distinct option tuple forever).
 
 Repeated ``OverlapIndex.search`` calls with stable options and shapes hit
 the same plan and the same compiled executable: zero re-tracing.  A changed
@@ -20,6 +26,7 @@ trace counter records it); a changed option is a new plan.
 """
 from __future__ import annotations
 
+from collections import OrderedDict
 from dataclasses import dataclass, field
 from typing import Any, Callable, NamedTuple
 
@@ -38,6 +45,7 @@ class PlanKey(NamedTuple):
     kernel: bool
     quantize: bool
     delta_capacity: int | None  # None: no delta phase compiled in
+    shards: int = 1  # device layout (1: single; >1: sharded island)
 
 
 @dataclass
@@ -56,37 +64,57 @@ class SearchPlan:
     calls: int = 0
 
 
-def _build_plan(key: PlanKey) -> SearchPlan:
+def _build_plan(key: PlanKey, backend=None) -> SearchPlan:
     plan = SearchPlan(key=key)
+    if backend is None:
+        # no layout backend (legacy/direct use): the single-device executor
+        def body(forest: DeviceForest, q, delta: DeltaView | None):
+            return knn_search_impl(
+                forest, q, k=key.k, mode=key.mode, beam=key.beam,
+                kernel=key.kernel, delta=delta,
+            )
+    else:
+        body = backend.search_body(key)
 
     def _impl(forest: DeviceForest, q, delta: DeltaView | None):
         # Runs only while jax traces (compiled executions skip python):
         # the counter is exactly the number of specializations.
         plan.traces += 1
-        return knn_search_impl(
-            forest, q, k=key.k, mode=key.mode, beam=key.beam,
-            kernel=key.kernel, delta=delta,
-        )
+        return body(forest, q, delta)
 
     plan.executor = jax.jit(_impl)
     return plan
 
 
 class PlanCache:
-    """Per-``OverlapIndex`` table of search plans."""
+    """Per-``OverlapIndex`` table of search plans, LRU-bounded.
 
-    def __init__(self) -> None:
-        self._plans: dict[PlanKey, SearchPlan] = {}
+    ``max_plans`` caps how many compiled executors stay alive; exceeding it
+    evicts the least-recently-used plan (its executable is dropped for jax
+    to GC — a re-request simply recompiles).  The default is far above any
+    sane working set of option tuples, so eviction only fires on
+    pathological churn (e.g. a distinct k per call)."""
+
+    def __init__(self, max_plans: int = 64) -> None:
+        if max_plans < 1:
+            raise ValueError(f"max_plans={max_plans} must be >= 1")
+        self._plans: OrderedDict[PlanKey, SearchPlan] = OrderedDict()
+        self.max_plans = max_plans
         self.hits = 0
         self.misses = 0
+        self.evictions = 0
 
-    def plan(self, key: PlanKey) -> SearchPlan:
+    def plan(self, key: PlanKey, backend=None) -> SearchPlan:
         got = self._plans.get(key)
         if got is None:
             self.misses += 1
-            got = self._plans[key] = _build_plan(key)
+            got = self._plans[key] = _build_plan(key, backend)
+            if len(self._plans) > self.max_plans:
+                self._plans.popitem(last=False)  # evict least recently used
+                self.evictions += 1
         else:
             self.hits += 1
+            self._plans.move_to_end(key)
         return got
 
     def __len__(self) -> int:
@@ -101,8 +129,10 @@ class PlanCache:
     def stats(self) -> dict[str, int]:
         return dict(
             plans=len(self._plans),
+            max_plans=self.max_plans,
             hits=self.hits,
             misses=self.misses,
+            evictions=self.evictions,
             traces=sum(p.traces for p in self._plans.values()),
         )
 

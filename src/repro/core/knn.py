@@ -170,6 +170,23 @@ class _Carry(NamedTuple):
     npad: Array
 
 
+class ScanOut(NamedTuple):
+    """One executor's bounded-scan result BEFORE the stats rollup: the top-k
+    carry plus the raw per-query cost counters.  On the single-device path
+    this is the whole search; on the sharded path each shard produces one
+    and the island merges ``top_d``/``top_i`` (``merge_shard_topk``) and
+    ``psum``s the counters before ``scan_stats`` builds ``SearchStats``."""
+
+    top_d: Array  # (Q, kk) ascending SQUARED distances
+    top_i: Array  # (Q, kk) global object ids, -1 pad
+    visits: Array  # (Q,) i32
+    ndist: Array  # (Q,) i32
+    npad: Array  # (Q,) i32
+    steps: Array  # () i32
+    n_elig: Array  # (Q,) i32 eligible main buckets
+    n_elig_d: Array  # (Q,) i32 eligible delta buckets
+
+
 def _sorted_bounds(lb: Array, beam: int) -> tuple[Array, Array, Array]:
     """Ascending visit order + sorted bounds, padded to a beam multiple."""
     nb = lb.shape[1]
@@ -234,6 +251,243 @@ def _scan_phase(
     return jax.lax.while_loop(cond, body, carry)
 
 
+def route_select(
+    forest: DeviceForest, q: Array, *, mode: str = "forest", kernel: bool = True
+) -> tuple[Array, Array, Array]:
+    """Alg. 2 STEP 1: per-query index selection + the routing cost counters.
+
+    Returns (sel (Q, I) bool, route_dists (Q,) i32, route_cmps (Q,) i32).
+    Touches only the REPLICATED forest leaves (centers, neighbors), so the
+    sharded island runs it unchanged on every shard — identical selection
+    everywhere is what makes the per-shard scans exact.
+    """
+    qn = q.shape[0]
+    n_idx = forest.index_centers.shape[0]
+    if mode == "forest":
+        _, closest = route_points(forest.index_centers, q, kernel=kernel)
+        sel = route_eligibility(closest, forest.neighbors)  # (Q, I)
+        route_dists = jnp.full((qn,), n_idx, jnp.int32)
+        route_cmps = jnp.full((qn,), n_idx, jnp.int32)
+    elif mode == "all":
+        sel = jnp.ones((qn, n_idx), jnp.bool_)
+        route_dists = jnp.zeros((qn,), jnp.int32)
+        route_cmps = jnp.zeros((qn,), jnp.int32)
+    else:
+        raise ValueError(f"mode {mode!r}")
+    return sel, route_dists, route_cmps
+
+
+class PhaseBounds(NamedTuple):
+    """STEP 2a output for one scan phase: the ascending visit order, the
+    sorted lower bounds (ineligible rows at +inf, padded to a beam multiple)
+    and the per-query eligible-row count for the cost instrumentation."""
+
+    order: Array  # (Q, n_steps*beam) int
+    lb_sorted: Array  # (Q, n_steps*beam) f32, ascending, +inf tail
+    n_elig: Array  # (Q,) i32
+
+
+def bucket_bounds(
+    forest: DeviceForest,
+    q: Array,
+    bucket_sel: Array,
+    *,
+    beam: int = 1,
+    kernel: bool = True,
+) -> PhaseBounds:
+    """STEP 2a over the main bucket rows: eligibility -> pivot lower bounds
+    -> sorted visit order.
+
+    Split from the scan body because the SORT must not share a program
+    region with the scan's ``while_loop`` under ``shard_map``+``jit`` (the
+    SPMD partitioner miscompiles sort-feeds-while on manually sharded
+    operands; see ``distributed/knn_island.sharded_search``).  The
+    single-device path simply calls both stages back to back — identical
+    ops, identical results.
+    """
+    elig = bucket_sel[:, forest.bucket_index]  # (Q, NB) -> sel[q, owner(b)]
+    # Bounds are only *used* for eligible buckets (ineligible ones are masked
+    # to +inf below), so the paper's Fig. 21 cost metric charges exactly the
+    # eligible count per query — not all NB rows of the distance matrix.
+    n_elig = jnp.sum(elig, axis=1, dtype=jnp.int32)  # (Q,)
+    d_piv = pairwise(q, forest.bucket_pivot, metric="l2", use_kernel=kernel)  # (Q, NB)
+    lb = jnp.maximum(d_piv - forest.bucket_radius[None, :], 0.0)
+    lb = jnp.where(elig, lb, jnp.inf)
+    order, lb_sorted, _ = _sorted_bounds(lb, beam)
+    return PhaseBounds(order=order, lb_sorted=lb_sorted, n_elig=n_elig)
+
+
+def delta_bounds(
+    delta: DeltaView,
+    q: Array,
+    delta_sel: Array,
+    *,
+    beam: int = 1,
+    kernel: bool = True,
+) -> PhaseBounds:
+    """STEP 2a over the delta rows (one streaming bucket per index; empty
+    buffers are never eligible)."""
+    dcount = jnp.sum(delta.mask, axis=1, dtype=jnp.int32)  # (I_d,)
+    elig_d = delta_sel & (dcount[None, :] > 0)  # (Q, I_d)
+    n_elig_d = jnp.sum(elig_d, axis=1, dtype=jnp.int32)
+    d_piv_d = pairwise(q, delta.pivot, metric="l2", use_kernel=kernel)
+    lb_d = jnp.maximum(d_piv_d - delta.radius[None, :], 0.0)
+    lb_d = jnp.where(elig_d, lb_d, jnp.inf)
+    order_d, lb_d_sorted, _ = _sorted_bounds(lb_d, beam)
+    return PhaseBounds(order=order_d, lb_sorted=lb_d_sorted, n_elig=n_elig_d)
+
+
+def scan_sorted(
+    forest: DeviceForest,
+    q: Array,
+    bounds: PhaseBounds,
+    *,
+    kk: int,
+    beam: int = 1,
+    kernel: bool = True,
+    delta: DeltaView | None = None,
+    dbounds: PhaseBounds | None = None,
+) -> ScanOut:
+    """STEP 2b/2c executor body: bounded best-first scan over the bucket
+    rows (and delta rows) it is given, visiting in the precomputed
+    ``PhaseBounds`` order.  Contains the ``while_loop`` but NO sort — see
+    ``bucket_bounds`` for why the stages are split."""
+    qn = q.shape[0]
+    _, cap, _ = forest.bucket_x.shape
+
+    init = _Carry(
+        top_d=jnp.full((qn, kk), jnp.inf),
+        top_i=jnp.full((qn, kk), -1, jnp.int32),
+        t=jnp.int32(0),
+        visits=jnp.zeros((qn,), jnp.int32),
+        ndist=jnp.zeros((qn,), jnp.int32),
+        npad=jnp.zeros((qn,), jnp.int32),
+    )
+
+    # real (unpadded) member count per bucket, for the cost instrumentation
+    bucket_count = jnp.sum(forest.bucket_mask, axis=1, dtype=jnp.int32)  # (NB,)
+    if kernel:
+        # tile-align the datastore-sized operands ONCE, outside the loop —
+        # the kernel wrapper's defensive per-call pads become no-ops
+        scan_x, scan_ids, scan_scale = kops.bucket_scan_prepad(
+            forest.bucket_x, forest.bucket_ids, forest.bucket_scale
+        )
+        scan_step = kops.bucket_scan_topk
+    else:
+        scan_x, scan_ids, scan_scale = (
+            forest.bucket_x, forest.bucket_ids, forest.bucket_scale,
+        )
+        scan_step = kref.bucket_scan_topk_ref
+
+    # order/lb_sorted are padded to exactly n_steps*beam (``_sorted_bounds``)
+    n_steps = jnp.int32(bounds.order.shape[1] // beam)
+    out = _scan_phase(
+        init, q, bounds.order, bounds.lb_sorted, n_steps, beam,
+        scan_step, scan_x, scan_ids, scan_scale, bucket_count, cap,
+    )
+    total_steps = out.t
+
+    n_elig_d = jnp.zeros((qn,), jnp.int32)
+    if delta is not None:
+        dcap = delta.x.shape[1]
+        dcount = jnp.sum(delta.mask, axis=1, dtype=jnp.int32)  # (I_d,)
+        if kernel:
+            dx, dids, _ = kops.bucket_scan_prepad(delta.x, delta.ids, None)
+            dstep = kops.delta_scan_topk
+        else:
+            dx, dids, dstep = delta.x, delta.ids, kref.bucket_scan_topk_ref
+        n_steps_d = jnp.int32(dbounds.order.shape[1] // beam)
+        out = _scan_phase(
+            out._replace(t=jnp.int32(0)), q, dbounds.order, dbounds.lb_sorted,
+            n_steps_d, beam, dstep, dx, dids, None, dcount, dcap,
+        )
+        total_steps = total_steps + out.t
+        n_elig_d = dbounds.n_elig
+
+    return ScanOut(
+        top_d=out.top_d,
+        top_i=out.top_i,
+        visits=out.visits,
+        ndist=out.ndist,
+        npad=out.npad,
+        steps=total_steps,
+        n_elig=bounds.n_elig,
+        n_elig_d=n_elig_d,
+    )
+
+
+def local_scan(
+    forest: DeviceForest,
+    q: Array,
+    bucket_sel: Array,
+    *,
+    kk: int,
+    beam: int = 1,
+    kernel: bool = True,
+    delta: DeltaView | None = None,
+    delta_sel: Array | None = None,
+) -> ScanOut:
+    """STEP 2 executor body over the bucket rows AND delta rows it is given.
+
+    The single-device path passes the whole forest; the sharded island calls
+    the split stages (``bucket_bounds``/``delta_bounds`` in one island,
+    ``scan_sorted`` in another) per shard on the LOCAL bucket/delta rows —
+    the scan itself never knows which.  ``bucket_sel`` (Q, I') is the
+    selection table indexed by ``forest.bucket_index``; I' may exceed the
+    true index count so that padded shard-alignment buckets can point at an
+    always-False sentinel column.  ``delta_sel`` (Q, I_d) selects per delta
+    row (defaults to ``bucket_sel``).
+
+    Returns the raw ``ScanOut``: top-kk carry (squared distances) + cost
+    counters, ready for ``merge_shard_topk`` / ``scan_stats``.
+    """
+    bounds = bucket_bounds(forest, q, bucket_sel, beam=beam, kernel=kernel)
+    dbounds = None
+    if delta is not None:
+        if delta_sel is None:
+            delta_sel = bucket_sel
+        dbounds = delta_bounds(delta, q, delta_sel, beam=beam, kernel=kernel)
+    return scan_sorted(
+        forest, q, bounds, kk=kk, beam=beam, kernel=kernel,
+        delta=delta, dbounds=dbounds,
+    )
+
+
+def merge_shard_topk(
+    top_d: Array, top_i: Array, *, k: int, axis_name: str
+) -> tuple[Array, Array]:
+    """Cross-shard top-k merge: gather k candidates per shard, keep the
+    global k.  Exactly the flat-datastore merge ``serve/retrieval.knn_logits``
+    runs — collective volume is k * 2 scalars per query per shard, never the
+    datastore.  k-per-shard guarantees exactness: the global top-k is a
+    subset of the union of per-shard top-ks.
+    """
+    d_all = jax.lax.all_gather(top_d, axis_name, axis=1, tiled=True)  # (Q, S*k)
+    i_all = jax.lax.all_gather(top_i, axis_name, axis=1, tiled=True)
+    neg, pos = jax.lax.top_k(-d_all, k)
+    return -neg, jnp.take_along_axis(i_all, pos, axis=1)
+
+
+def scan_stats(
+    route_dists: Array, route_cmps: Array, out: ScanOut, *, kk: int
+) -> SearchStats:
+    """Roll a (possibly merged) ``ScanOut`` + routing counters into the
+    paper's ``SearchStats``.  Shared by both executors so the instrumented
+    cost model cannot drift between layouts."""
+    return SearchStats(
+        buckets_visited=out.visits,
+        distances=out.ndist,
+        bound_distances=route_dists + out.n_elig + out.n_elig_d,
+        padded_distances=out.npad,
+        comparisons=route_cmps
+        + out.n_elig + out.n_elig_d  # bound comparisons (eligible buckets)
+        # top-k merge comparisons over every padded lane actually scanned
+        # (npad carries each phase's own bucket capacity)
+        + out.npad * jnp.int32(int(np.ceil(np.log2(max(kk, 2))))),
+        steps=out.steps,
+    )
+
+
 def knn_search_impl(
     forest: DeviceForest,
     q: Array,
@@ -267,105 +521,19 @@ def knn_search_impl(
     top-k carry, over the per-index append buffers.  Results are then exact
     over main forest + delta members (within the mode's selection semantics).
     """
-    qn = q.shape[0]
     n_idx = forest.index_centers.shape[0]
     nb, cap, _ = forest.bucket_x.shape
     n_cap = nb * cap
     if delta is not None:
-        dcap = delta.x.shape[1]
-        n_cap += n_idx * dcap
+        n_cap += n_idx * delta.x.shape[1]
     kk = min(k, n_cap)
 
-    # ---- STEP 1: routing ---------------------------------------------------
-    if mode == "forest":
-        _, closest = route_points(forest.index_centers, q, kernel=kernel)
-        sel = route_eligibility(closest, forest.neighbors)  # (Q, I)
-        route_dists = jnp.full((qn,), n_idx, jnp.int32)
-        route_cmps = jnp.full((qn,), n_idx, jnp.int32)
-    elif mode == "all":
-        sel = jnp.ones((qn, n_idx), jnp.bool_)
-        route_dists = jnp.zeros((qn,), jnp.int32)
-        route_cmps = jnp.zeros((qn,), jnp.int32)
-    else:
-        raise ValueError(f"mode {mode!r}")
-
-    elig = sel[:, forest.bucket_index]  # (Q, NB) -> sel[q, owner(b)]
-    # Bounds are only *used* for eligible buckets (ineligible ones are masked
-    # to +inf below), so the paper's Fig. 21 cost metric charges exactly the
-    # eligible count per query — not all NB rows of the distance matrix.
-    n_elig = jnp.sum(elig, axis=1, dtype=jnp.int32)  # (Q,)
-
-    # ---- STEP 2a: lower bounds + visit order --------------------------------
-    d_piv = pairwise(q, forest.bucket_pivot, metric="l2", use_kernel=kernel)  # (Q, NB)
-    lb = jnp.maximum(d_piv - forest.bucket_radius[None, :], 0.0)
-    lb = jnp.where(elig, lb, jnp.inf)
-    order, lb_sorted, n_steps = _sorted_bounds(lb, beam)
-
-    # ---- STEP 2b: bounded scan ----------------------------------------------
-    init = _Carry(
-        top_d=jnp.full((qn, kk), jnp.inf),
-        top_i=jnp.full((qn, kk), -1, jnp.int32),
-        t=jnp.int32(0),
-        visits=jnp.zeros((qn,), jnp.int32),
-        ndist=jnp.zeros((qn,), jnp.int32),
-        npad=jnp.zeros((qn,), jnp.int32),
+    sel, route_dists, route_cmps = route_select(forest, q, mode=mode, kernel=kernel)
+    out = local_scan(
+        forest, q, sel, kk=kk, beam=beam, kernel=kernel,
+        delta=delta, delta_sel=sel,
     )
-
-    # real (unpadded) member count per bucket, for the cost instrumentation
-    bucket_count = jnp.sum(forest.bucket_mask, axis=1, dtype=jnp.int32)  # (NB,)
-    if kernel:
-        # tile-align the datastore-sized operands ONCE, outside the loop —
-        # the kernel wrapper's defensive per-call pads become no-ops
-        scan_x, scan_ids, scan_scale = kops.bucket_scan_prepad(
-            forest.bucket_x, forest.bucket_ids, forest.bucket_scale
-        )
-        scan_step = kops.bucket_scan_topk
-    else:
-        scan_x, scan_ids, scan_scale = (
-            forest.bucket_x, forest.bucket_ids, forest.bucket_scale,
-        )
-        scan_step = kref.bucket_scan_topk_ref
-
-    out = _scan_phase(
-        init, q, order, lb_sorted, n_steps, beam,
-        scan_step, scan_x, scan_ids, scan_scale, bucket_count, cap,
-    )
-    total_steps = out.t
-
-    # ---- STEP 2c: delta-bucket scan phase (streaming tail arrays) -----------
-    n_elig_d = jnp.zeros((qn,), jnp.int32)
-    if delta is not None:
-        dcount = jnp.sum(delta.mask, axis=1, dtype=jnp.int32)  # (I,)
-        # one delta bucket per index, owner(b) = b; empty buffers ineligible
-        elig_d = sel & (dcount[None, :] > 0)  # (Q, I)
-        n_elig_d = jnp.sum(elig_d, axis=1, dtype=jnp.int32)
-        d_piv_d = pairwise(q, delta.pivot, metric="l2", use_kernel=kernel)
-        lb_d = jnp.maximum(d_piv_d - delta.radius[None, :], 0.0)
-        lb_d = jnp.where(elig_d, lb_d, jnp.inf)
-        order_d, lb_d_sorted, n_steps_d = _sorted_bounds(lb_d, beam)
-        if kernel:
-            dx, dids, _ = kops.bucket_scan_prepad(delta.x, delta.ids, None)
-            dstep = kops.delta_scan_topk
-        else:
-            dx, dids, dstep = delta.x, delta.ids, kref.bucket_scan_topk_ref
-        out = _scan_phase(
-            out._replace(t=jnp.int32(0)), q, order_d, lb_d_sorted, n_steps_d,
-            beam, dstep, dx, dids, None, dcount, dcap,
-        )
-        total_steps = total_steps + out.t
-
-    stats = SearchStats(
-        buckets_visited=out.visits,
-        distances=out.ndist,
-        bound_distances=route_dists + n_elig + n_elig_d,
-        padded_distances=out.npad,
-        comparisons=route_cmps
-        + n_elig + n_elig_d  # bound comparisons (only eligible buckets)
-        # top-k merge comparisons over every padded lane actually scanned
-        # (npad carries each phase's own bucket capacity)
-        + out.npad * jnp.int32(int(np.ceil(np.log2(max(kk, 2))))),
-        steps=total_steps,
-    )
+    stats = scan_stats(route_dists, route_cmps, out, kk=kk)
     return jnp.sqrt(out.top_d), out.top_i, stats
 
 

@@ -24,6 +24,7 @@ Datastore variants:
 """
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass
 from typing import Any
 
@@ -81,6 +82,11 @@ class ForestDatastore:
     delta: Any = None  # stream.ingest.DeltaBuffer | None
     n_main: int = 0
     next_id: int = 0
+    # device layout (static: search/ingest branch on it at trace time).
+    # 1 = single device; >1 = forest bucket rows + delta buffers sharded over
+    # that many devices on the 'model' axis, searches run the
+    # distributed/knn_island.py islands.
+    shards: int = dataclasses.field(default=1, metadata=dict(static=True))
 
 
 def datastore_from_index(
@@ -102,8 +108,12 @@ def datastore_from_index(
     delta yet — per-index buffers sized ``2 * stream_capacity / n_indexes``
     (floor 32): 2x headroom for routing skew without multiplying memory by
     the index count; a pathologically skewed stream hits the reported
-    capacity-reject path instead."""
-    from repro.core.knn import device_forest
+    capacity-reject path instead.
+
+    The index's device layout rides along: forest upload and delta placement
+    go through ``ix.backend``, so a sharded index serves a sharded datastore
+    (``shards`` recorded on the result) and searches keep running the same
+    islands — bitwise-identical to serving the single-device layout."""
     from repro.stream.ingest import alloc_delta
 
     values = np.asarray(values)
@@ -114,16 +124,18 @@ def datastore_from_index(
         )
     device = (
         ix.device if quantized is None
-        else device_forest(ix.forest, quantize=quantized)
+        else ix.backend.upload_forest(ix.forest, quantize=quantized)
     )
-    delta = ix.delta
+    delta = ix.device_delta  # placed (padded + sharded under that layout)
     vals = jnp.asarray(values, jnp.int32)
     if stream_capacity > 0:
         if delta is None:
             capd = min(
                 stream_capacity, -(-2 * stream_capacity // ix.forest.n_indexes)
             )
-            delta = alloc_delta(ix.forest, max(32, capd))
+            delta = ix.backend.place_delta(
+                alloc_delta(ix.forest, max(32, capd))
+            )
         vals = jnp.concatenate([vals, jnp.zeros((stream_capacity,), jnp.int32)])
     return ForestDatastore(
         forest=device,
@@ -131,6 +143,7 @@ def datastore_from_index(
         delta=delta,
         n_main=ix.n_total,
         next_id=ix.n_total,
+        shards=ix.backend.shards,
     )
 
 
@@ -181,8 +194,6 @@ def ingest_keys(
     rather than blocking the decode loop on a rebuild; the offline
     StreamingForest wrapper is the no-loss path).
     """
-    from repro.stream.ingest import ingest
-
     if ds.delta is None:
         raise ValueError("datastore built without stream_capacity")
     next_id = int(ds.next_id)
@@ -190,9 +201,8 @@ def ingest_keys(
     if room <= 0:
         return ds, 0
     keys_j = jnp.asarray(keys, jnp.float32)
-    _, acc = ingest(  # probe: same state + same routing => same acceptance
-        ds.forest, ds.delta, keys_j,
-        jnp.full((keys_j.shape[0],), -1, jnp.int32),
+    _, acc = _run_ingest(  # probe: same state + same routing => same acceptance
+        ds, keys_j, jnp.full((keys_j.shape[0],), -1, jnp.int32)
     )
     # Dropping rejected rows cannot demote an accepted one: within each
     # destination run the kept rows' slot ranks only shrink.
@@ -200,17 +210,34 @@ def ingest_keys(
     if take.size == 0:
         return ds, 0
     ids = jnp.arange(next_id, next_id + take.size, dtype=jnp.int32)
-    new_delta, _ = ingest(ds.forest, ds.delta, keys_j[take], ids)
+    new_delta, _ = _run_ingest(ds, keys_j[take], ids)
     new_values = ds.values.at[ids].set(
         jnp.asarray(np.asarray(values)[take], jnp.int32)
     )
     return (
-        ForestDatastore(
-            forest=ds.forest, values=new_values, delta=new_delta,
-            n_main=ds.n_main, next_id=next_id + int(take.size),
+        dataclasses.replace(
+            ds, values=new_values, delta=new_delta,
+            next_id=next_id + int(take.size),
         ),
         int(take.size),
     )
+
+
+def _run_ingest(ds: ForestDatastore, keys_j: Array, ids: Array):
+    """Route + append one batch under the datastore's device layout: the
+    single-device ``stream.ingest`` executor, or the collective-scatter
+    island when the buffers are sharded."""
+    from repro.stream.ingest import ingest
+
+    if ds.shards > 1:
+        from repro.distributed import knn_island
+
+        return knn_island.sharded_ingest(
+            knn_island.default_mesh(ds.shards), dctx.MODEL_AXIS,
+            ds.forest.index_centers, ds.delta, keys_j, ids,
+            jnp.ones((keys_j.shape[0],), jnp.bool_),
+        )
+    return ingest(ds.forest, ds.delta, keys_j, ids)
 
 
 def forest_knn(
@@ -228,10 +255,19 @@ def forest_knn(
     from repro.stream.ingest import delta_view
 
     delta = None if ds.delta is None else delta_view(ds.delta)
-    d, ids, _ = knn_search_impl(
-        ds.forest, hidden.astype(jnp.float32), k=k, mode="forest", kernel=kernel,
-        delta=delta,
-    )
+    if ds.shards > 1:
+        from repro.distributed import knn_island
+
+        d, ids, _ = knn_island.sharded_search(
+            knn_island.default_mesh(ds.shards), dctx.MODEL_AXIS,
+            ds.forest, hidden.astype(jnp.float32), delta,
+            k=k, mode="forest", kernel=kernel,
+        )
+    else:
+        d, ids, _ = knn_search_impl(
+            ds.forest, hidden.astype(jnp.float32), k=k, mode="forest",
+            kernel=kernel, delta=delta,
+        )
     vals = ds.values[jnp.clip(ids, 0, ds.values.shape[0] - 1)]
     vals = jnp.where(ids >= 0, vals, 0)
     d = jnp.where(ids >= 0, d, jnp.inf)
@@ -271,14 +307,16 @@ def knn_logits(
         vals = ds.values[idx]  # (B, k)
     else:
         def island(q_l, keys, values, scale):
+            from repro.core.knn import merge_shard_topk
+
             ds_l = Datastore(keys=keys, values=values, scale=scale)
             d2_l, idx_l = _local_topk(q_l, ds_l, r.k)
-            v_l = values[idx_l]
-            # gather k candidates per shard -> (B, tp * k), merge exactly
-            d2_all = jax.lax.all_gather(d2_l, dctx.MODEL_AXIS, axis=1, tiled=True)
-            v_all = jax.lax.all_gather(v_l, dctx.MODEL_AXIS, axis=1, tiled=True)
-            neg, pos = jax.lax.top_k(-d2_all, r.k)
-            return -neg, jnp.take_along_axis(v_all, pos, axis=1)
+            # k candidates per shard -> exact global top-k; the identical
+            # merge the forest island runs (collective volume is k pairs per
+            # query per shard, never the datastore)
+            return merge_shard_topk(
+                d2_l, values[idx_l], k=r.k, axis_name=dctx.MODEL_AXIS
+            )
 
         scale_spec = P(dctx.MODEL_AXIS) if ds.scale is not None else None
         d2, vals = dctx.shard_map(

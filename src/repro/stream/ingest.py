@@ -111,45 +111,30 @@ def delta_view(delta: DeltaBuffer) -> DeltaView:
     )
 
 
-@jax.jit
-def ingest(
-    forest: DeviceForest,
-    delta: DeltaBuffer,
-    xb: Array,
-    ids: Array,
-    valid: Array | None = None,
+def append_routed(
+    delta: DeltaBuffer, xb: Array, ids: Array, idx: Array, valid: Array
 ) -> tuple[DeltaBuffer, Array]:
-    """Route + append one batch; returns (new delta, accepted (B,) bool).
+    """Append one ALREADY-ROUTED batch; returns (new delta, accepted).
 
-    Jittable end to end: routing reuses STEP-1 (``route_points``), slot
-    assignment sorts the batch by destination index and ranks within runs
-    (O(B log B), no (B, B) mask), appends are a single scatter with
-    ``mode='drop'`` — a slot past capacity falls outside the array and the
-    point is reported rejected instead of written.
+    ``idx`` (B,) i32 is the destination buffer row; any value >= the row
+    count parks the point (every scatter drops the row, it consumes no slot,
+    counts nowhere — not even ``dropped`` — and reports accepted=False when
+    ``valid`` is also False).  ``valid`` (B,) bool marks the rows that are
+    really in the batch this round.
 
-    ``accepted[j]`` is False only when point j's destination buffer is full;
-    the caller requeues those points after running maintenance (see
-    stream/maintenance.StreamingForest.ingest, which never loses a point).
-
-    ``valid`` (optional (B,) bool) masks rows out of the batch entirely:
-    invalid rows are parked on a virtual out-of-range index so they consume
-    no slots, store nothing, count nowhere (not even ``dropped``), and
-    report accepted=False.  Retry loops keep the SAME batch shape across
-    rounds by flipping the mask instead of slicing — one compiled program
-    instead of one per rejected-point count.
+    This is the executor body both device layouts share: the single-device
+    path calls it with GLOBAL buffer rows, the sharded island per shard with
+    LOCAL rows (other shards' points arrive parked).  Slot assignment sorts
+    by destination and ranks within runs (O(B log B), no (B, B) mask) — a
+    stable sort preserves batch order within each destination run, so the
+    per-index slot layout is bitwise-identical across layouts.  Pure and
+    un-jitted; callers own the compilation boundary.
     """
     b = xb.shape[0]
     n_idx = delta.count.shape[0]
     capd = delta.x.shape[1]
-    xb = xb.astype(jnp.float32)
-    ids = ids.astype(jnp.int32)
 
-    # 1. route (STEP-1; same arithmetic as the query path)
-    _, idx = route_points(forest.index_centers, xb, kernel=True)  # (B,)
-    if valid is not None:
-        idx = jnp.where(valid, idx, n_idx)  # park: every scatter drops row I
-
-    # 2. slot assignment: rank within same-destination runs of the batch
+    # 1. slot assignment: rank within same-destination runs of the batch
     order = jnp.argsort(idx, stable=True)
     s = idx[order]  # (B,) sorted destinations
     pos = jnp.arange(b, dtype=jnp.int32)
@@ -159,17 +144,16 @@ def ingest(
     slot = delta.count[s] + rank  # (B,) target slot in sorted order
     acc_sorted = slot < capd
 
-    # 3. scatter-append (out-of-capacity slots drop out of the scatter)
+    # 2. scatter-append (out-of-capacity slots drop out of the scatter)
     xs = xb[order]
     new_x = delta.x.at[s, slot].set(xs, mode="drop")
     new_ids = delta.ids.at[s, slot].set(ids[order], mode="drop")
 
     # unsort the accept mask back to batch order
     accepted = jnp.zeros((b,), bool).at[order].set(acc_sorted)
-    if valid is not None:
-        accepted = accepted & valid  # parked rows: slot math is meaningless
+    accepted = accepted & valid  # parked rows: slot math is meaningless
 
-    # 4. running bookkeeping (accepted points only; parked rows scatter to
+    # 3. running bookkeeping (accepted points only; parked rows scatter to
     #    the out-of-range virtual index and drop)
     d_piv = jnp.sqrt(
         jnp.maximum(
@@ -194,6 +178,67 @@ def ingest(
         ),
         accepted,
     )
+
+
+def ingest_impl(
+    centers: Array,
+    delta: DeltaBuffer,
+    xb: Array,
+    ids: Array,
+    valid: Array | None = None,
+) -> tuple[DeltaBuffer, Array]:
+    """Route + append one batch (un-jitted executor body; see ``ingest``).
+
+    Takes the routing CENTERS, not the whole ``DeviceForest``: ingest never
+    reads the bucket arrays, and a maintenance rebuild changes their shapes
+    — keying the jit cache on the full forest forced a full re-trace after
+    every rebuild (the BENCH_stream ~360 points/s regression).  Centers keep
+    a stable (I, D) shape for the life of the index.
+    """
+    n_idx = delta.count.shape[0]
+    xb = xb.astype(jnp.float32)
+    ids = ids.astype(jnp.int32)
+
+    # route (STEP-1; same arithmetic as the query path)
+    _, idx = route_points(centers, xb, kernel=True)  # (B,)
+    if valid is None:
+        valid = jnp.ones((xb.shape[0],), bool)
+    else:
+        idx = jnp.where(valid, idx, n_idx)  # park: every scatter drops row I
+    return append_routed(delta, xb, ids, idx, valid)
+
+
+_ingest_jit = jax.jit(ingest_impl)
+
+
+def ingest(
+    forest: DeviceForest,
+    delta: DeltaBuffer,
+    xb: Array,
+    ids: Array,
+    valid: Array | None = None,
+) -> tuple[DeltaBuffer, Array]:
+    """Route + append one batch; returns (new delta, accepted (B,) bool).
+
+    Jitted end to end (cache keyed on the routing centers + operand shapes,
+    NOT the forest's bucket arrays): routing reuses STEP-1
+    (``route_points``), slot assignment sorts the batch by destination index
+    and ranks within runs (O(B log B), no (B, B) mask), appends are a single
+    scatter with ``mode='drop'`` — a slot past capacity falls outside the
+    array and the point is reported rejected instead of written.
+
+    ``accepted[j]`` is False only when point j's destination buffer is full;
+    the caller requeues those points after running maintenance (see
+    api.OverlapIndex.ingest, which never loses a point).
+
+    ``valid`` (optional (B,) bool) masks rows out of the batch entirely:
+    invalid rows are parked on a virtual out-of-range index so they consume
+    no slots, store nothing, count nowhere (not even ``dropped``), and
+    report accepted=False.  Retry loops keep the SAME batch shape across
+    rounds by flipping the mask instead of slicing — one compiled program
+    instead of one per rejected-point count.
+    """
+    return _ingest_jit(forest.index_centers, delta, xb, ids, valid)
 
 
 def updated_geometry(delta: DeltaBuffer) -> tuple[Array, Array]:

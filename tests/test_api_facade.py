@@ -14,11 +14,13 @@ from repro.api import (
     Config,
     ConfigError,
     IndexConfig,
+    LayoutConfig,
     OverlapIndex,
     RepoDeprecationWarning,
     SearchConfig,
     StreamConfig,
     available_overlap_methods,
+    make_backend,
     register_overlap_method,
     unregister_overlap_method,
 )
@@ -68,6 +70,10 @@ BAD_CONFIGS = [
     (lambda: StreamConfig(fill_rebuild=0.0), "fill_rebuild"),
     (lambda: StreamConfig(pivot_method="median"), "pivot_method"),
     (lambda: StreamConfig(c_max=1), "c_max"),
+    (lambda: LayoutConfig(kind="mirrored"), "LayoutConfig.kind"),
+    (lambda: LayoutConfig(kind="sharded", shards=0), "shards"),
+    (lambda: LayoutConfig(shards=2), "kind='sharded'"),
+    (lambda: LayoutConfig(axis=""), "axis"),
 ]
 
 
@@ -161,6 +167,62 @@ def test_search_plan_cache_never_retraces_stable_shapes(built, rng):
     assert plan.traces == 2
     ix.search(q[:7], k=9)
     assert plan.traces == 2
+
+
+def test_plan_cache_lru_evicts_and_counts():
+    """The cache is bounded: exceeding max_plans drops the least-recently-
+    USED plan (a later re-request simply recompiles as a fresh miss)."""
+    from repro.api.plan import PlanCache, PlanKey
+
+    def key(k):
+        return PlanKey(k=k, mode="forest", beam=1, kernel=True,
+                       quantize=False, delta_capacity=None)
+
+    cache = PlanCache(max_plans=2)
+    cache.plan(key(1))
+    cache.plan(key(2))
+    cache.plan(key(1))  # refresh recency: key(2) is now the LRU entry
+    cache.plan(key(3))  # over the cap -> evicts key(2)
+    assert key(2) not in cache and key(1) in cache and key(3) in cache
+    st = cache.stats()
+    assert (st["plans"], st["max_plans"]) == (2, 2)
+    assert (st["hits"], st["misses"], st["evictions"]) == (1, 3, 1)
+    cache.plan(key(2))  # re-request: a plain recompile, not an error
+    assert cache.stats()["misses"] == 4 and cache.stats()["evictions"] == 2
+    assert len(cache) == 2
+    with pytest.raises(ValueError, match="max_plans"):
+        PlanCache(max_plans=0)
+
+
+def test_ingest_executor_never_retraces_ragged_batches(blob_data):
+    """Steady-state streaming compiles ONE ingest program: ragged tail
+    chunks pad up to a power-of-two shape (rows parked invalid), so only a
+    genuinely new padded shape re-traces."""
+    ix = OverlapIndex.build(blob_data, CFG)  # capacity=128
+    ix.ingest(_stream_points(blob_data, 64, seed=0))
+    assert ix.ingest_stats()["traces"] == 1
+    ix.ingest(_stream_points(blob_data, 64, seed=1))
+    ix.ingest(_stream_points(blob_data, 40, seed=2))  # pads up to 64
+    st = ix.ingest_stats()
+    assert st["traces"] == 1, f"steady-state ingest re-traced: {st}"
+    assert st["calls"] >= 3
+    ix.ingest(_stream_points(blob_data, 17, seed=3))  # pads to 32: new shape
+    assert ix.ingest_stats()["traces"] == 2
+
+
+def test_make_backend_strict_raises_clamp_downgrades():
+    """An explicit build with more shards than devices fails with the XLA
+    override hint; the load path clamps (with a warning) so a snapshot from
+    a bigger host still opens here."""
+    import jax
+
+    too_many = jax.device_count() + 1
+    layout = LayoutConfig(kind="sharded", shards=too_many)
+    with pytest.raises(ConfigError, match="xla_force_host_platform_device_count"):
+        make_backend(layout)
+    with pytest.warns(UserWarning, match="re-sharding"):
+        backend = make_backend(layout, clamp=True)
+    assert backend.shards == jax.device_count()
 
 
 def test_search_overrides_are_validated(built, rng):
