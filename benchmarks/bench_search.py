@@ -78,6 +78,7 @@ def run(
     quantize: bool = False,
     smoke: bool = False,
     shards: int = 1,
+    obs: bool = True,
 ) -> None:
     """``kernel`` routes all search distances through the kernels/ops
     dispatch layer (fused Pallas bucket scan on TPU); ``quantize`` stores
@@ -98,14 +99,15 @@ def run(
         indexes = {
             method: OverlapIndex.build(
                 ds.x, facade_config(
-                    ds, method, shards=shards, kernel=kernel, quantize=quantize
+                    ds, method, shards=shards, obs=obs, kernel=kernel,
+                    quantize=quantize,
                 )
             )
             for method in METHODS
         }
         indexes["bccf"] = OverlapIndex.baseline(
             ds.x, baseline_config(
-                ds, shards=shards, kernel=kernel, quantize=quantize
+                ds, shards=shards, obs=obs, kernel=kernel, quantize=quantize
             )
         )
         refs = {}
@@ -168,7 +170,7 @@ def run(
                  f"plan_cache={ix.plans.stats()}")
     write_artifact("search", meta=dict(
         full=full, smoke=smoke, kernel=kernel, quantize=quantize,
-        shards=shards,
+        shards=shards, obs=obs,
     ))
     if diverged:
         raise SystemExit(
@@ -190,6 +192,9 @@ if __name__ == "__main__":
     ap.add_argument("--shards", type=int, default=1,
                     help="run under the sharded device layout (N devices on "
                     "the 'model' axis) and hard-gate bitwise vs single")
+    ap.add_argument("--no-obs", action="store_true",
+                    help="disable the telemetry registry (repro.obs) — for "
+                    "measuring the metrics layer's own overhead")
     a = ap.parse_args()
     run(full=a.full, kernel=not a.no_kernel, quantize=a.quantize,
-        smoke=a.smoke, shards=a.shards)
+        smoke=a.smoke, shards=a.shards, obs=not a.no_obs)

@@ -1,0 +1,178 @@
+"""Rolling-median bench regression gate: fail CI only on SUSTAINED
+us_per_query regression, never on single-run noise.
+
+The idiom (HomebrewNLP's wandblog early warning, pointed at by ROADMAP's
+serving-telemetry item): keep a history of per-run medians per (dataset,
+method) series, compare the median of the newest ``--window`` runs against
+the median of everything before that window, and flag only when the
+CURRENT window's median exceeds ``--threshold`` x the baseline median.  A
+single noisy run cannot move a window median; a genuine 2x slowdown that
+persists for a window of runs flips the gate deterministically.
+
+Warm-up semantics: with fewer than ``--min-runs`` total runs in a series
+(default: two windows' worth) the verdict is WARN-ONLY — the gate reports
+but never fails, so a fresh history (new runner fleet, new series) hard-
+gates only once its own baseline exists.
+
+Typical CI wiring (.github/workflows/ci.yml):
+
+    python -m benchmarks.check_regress \
+        --artifact BENCH_search.json \
+        --history .bench_history/search_history.jsonl \
+        --seed benchmarks/history/search_history.jsonl \
+        --window 5 --update --gate
+
+``--history`` persists across runs via actions/cache; ``--seed`` bootstraps
+an empty history from the committed baseline; ``--update`` appends this
+run's entries after checking (so the gate never judges a run against
+itself); ``--gate`` turns sustained regressions into a non-zero exit.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from benchmarks.common import (
+    append_history,
+    history_entries,
+    history_series,
+    load_history,
+    rolling_median,
+)
+
+OK, REGRESSED, INSUFFICIENT = "ok", "REGRESSED", "insufficient-history"
+
+
+def check_series(
+    values: list[float],
+    *,
+    window: int,
+    threshold: float,
+    min_runs: int,
+) -> tuple[str, dict]:
+    """Verdict for one series whose LAST element is the run under test.
+
+    Returns (status, detail): ``ok`` / ``REGRESSED`` / ``insufficient-
+    history``.  ``detail`` carries the window median, the baseline median,
+    and their ratio for reporting."""
+    n = len(values)
+    current = rolling_median(values, window)
+    baseline_vals = values[:-window] if n > window else []
+    if n < min_runs or not baseline_vals:
+        return INSUFFICIENT, {
+            "runs": n,
+            "min_runs": min_runs,
+            "current_median": current,
+        }
+    baseline = rolling_median(baseline_vals, len(baseline_vals))
+    ratio = current / baseline if baseline > 0 else float("inf")
+    detail = {
+        "runs": n,
+        "current_median": current,
+        "baseline_median": baseline,
+        "ratio": ratio,
+        "threshold": threshold,
+    }
+    return (REGRESSED if ratio > threshold else OK), detail
+
+
+def run_check(
+    artifact_path: str,
+    history_path: str,
+    *,
+    seed_path: str | None = None,
+    window: int = 5,
+    threshold: float = 1.5,
+    min_runs: int | None = None,
+    update: bool = False,
+    gate: bool = False,
+) -> int:
+    """The whole gate; returns the process exit code (0 pass / 1 fail)."""
+    if min_runs is None:
+        min_runs = 2 * window
+    with open(artifact_path) as f:
+        payload = json.load(f)
+    current = history_entries(payload)
+    if not current:
+        print(f"# {artifact_path}: no (dataset, method, us_per_query) "
+              "records — nothing to gate")
+        return 0
+
+    past = load_history(history_path)
+    seeded = False
+    if not past and seed_path:
+        past = load_history(seed_path)
+        seeded = bool(past)
+        if seeded:
+            print(f"# history {history_path} empty; seeded "
+                  f"{len(past)} entries from {seed_path}")
+    series = history_series(past)
+
+    failures = []
+    for entry in current:
+        key = (entry["dataset"], entry["method"])
+        values = series.get(key, []) + [entry["us_per_query"]]
+        status, detail = check_series(
+            values, window=window, threshold=threshold, min_runs=min_runs
+        )
+        name = f"{key[0]}/{key[1]}"
+        if status == INSUFFICIENT:
+            print(f"regress/{name}: {status} ({detail['runs']}/"
+                  f"{detail['min_runs']} runs, current median "
+                  f"{detail['current_median']:.1f} us) — warn-only")
+        else:
+            print(f"regress/{name}: {status} window-median "
+                  f"{detail['current_median']:.1f} us vs baseline "
+                  f"{detail['baseline_median']:.1f} us "
+                  f"(x{detail['ratio']:.2f}, gate x{threshold:.2f}, "
+                  f"{detail['runs']} runs)")
+        if status == REGRESSED:
+            failures.append(name)
+
+    if update:
+        if seeded:
+            append_history(history_path, past)  # materialize the seed once
+        append_history(history_path, current)
+        print(f"# appended {len(current)} entries to {history_path}")
+
+    if failures:
+        msg = (f"sustained regression (rolling median over window={window}) "
+               f"in {len(failures)} series: {', '.join(failures)}")
+        if gate:
+            print(f"FAIL: {msg}", file=sys.stderr)
+            return 1
+        print(f"WARN (no --gate): {msg}")
+    return 0
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--artifact", default="BENCH_search.json",
+                    help="BENCH artifact of the run under test")
+    ap.add_argument("--history", required=True,
+                    help="JSONL history file (persisted across CI runs)")
+    ap.add_argument("--seed", default=None,
+                    help="committed baseline JSONL used when --history "
+                    "does not exist yet")
+    ap.add_argument("--window", type=int, default=5,
+                    help="runs per rolling-median window")
+    ap.add_argument("--threshold", type=float, default=1.5,
+                    help="fail when window median > threshold x baseline")
+    ap.add_argument("--min-runs", type=int, default=None,
+                    help="runs required before the gate can fail "
+                    "(default: 2*window — warn-only for the first window)")
+    ap.add_argument("--update", action="store_true",
+                    help="append this run's entries to the history")
+    ap.add_argument("--gate", action="store_true",
+                    help="exit non-zero on sustained regression")
+    a = ap.parse_args(argv)
+    return run_check(
+        a.artifact, a.history, seed_path=a.seed, window=a.window,
+        threshold=a.threshold, min_runs=a.min_runs, update=a.update,
+        gate=a.gate,
+    )
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

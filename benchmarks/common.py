@@ -12,7 +12,13 @@ import numpy as np
 
 sys.path.insert(0, "src")  # allow `python -m benchmarks.run` without install
 
-from repro.api import Config, IndexConfig, LayoutConfig, SearchConfig  # noqa: E402
+from repro.api import (  # noqa: E402
+    Config,
+    IndexConfig,
+    LayoutConfig,
+    ObsConfig,
+    SearchConfig,
+)
 from repro.data.synthetic import tracking_like, ward_like  # noqa: E402
 
 METHODS = ("dbm", "obm", "vbm")
@@ -70,17 +76,22 @@ def layout_config(shards: int = 1) -> LayoutConfig:
 
 
 def facade_config(
-    ds: BenchDataset, method: str, *, shards: int = 1, **search
+    ds: BenchDataset, method: str, *, shards: int = 1, obs: bool = True,
+    **search,
 ) -> Config:
-    """Full Config tree for OverlapIndex.build over a bench dataset."""
+    """Full Config tree for OverlapIndex.build over a bench dataset.
+    ``obs=False`` disables the telemetry registry (overhead comparisons)."""
     return Config(
         index=index_config(ds, method),
         search=SearchConfig(**search),
         layout=layout_config(shards),
+        obs=ObsConfig(enabled=obs),
     )
 
 
-def baseline_config(ds: BenchDataset, *, shards: int = 1, **search) -> Config:
+def baseline_config(
+    ds: BenchDataset, *, shards: int = 1, obs: bool = True, **search
+) -> Config:
     """BCCF baseline config: documented 'kmeans' pivot semantics, explicit
     so the honored-pivot warning never fires in benchmarks."""
     import dataclasses
@@ -89,6 +100,7 @@ def baseline_config(ds: BenchDataset, *, shards: int = 1, **search) -> Config:
         index=dataclasses.replace(index_config(ds, "vbm"), pivot_method="kmeans"),
         search=SearchConfig(**search),
         layout=layout_config(shards),
+        obs=ObsConfig(enabled=obs),
     )
 
 
@@ -149,3 +161,74 @@ def write_artifact(bench: str, meta: dict | None = None) -> str:
         json.dump(payload, f, indent=1, sort_keys=True)
     print(f"# wrote {path} ({len(payload['records'])} records)")
     return path
+
+
+# ---------------------------------------------------------------------------
+# BENCH-artifact history: the substrate of the rolling-median regression
+# gate (benchmarks/check_regress.py).  One JSONL line per (run, dataset,
+# method) keeps the us_per_query trajectory across CI runs; windowed medians
+# over that series flag SUSTAINED regressions while staying blind to
+# single-run noise (the HomebrewNLP wandblog early-warning idiom).
+# ---------------------------------------------------------------------------
+
+
+def history_entries(payload: dict) -> list[dict]:
+    """Collapse one BENCH artifact payload into per-(dataset, method)
+    history lines: the MEDIAN us_per_query across the run's k sweep (one
+    scalar per series per run keeps the gate's window semantics simple)."""
+    by: dict[tuple[str, str], list[float]] = {}
+    for r in payload.get("records", []):
+        if "us_per_query" in r and "dataset" in r and "method" in r:
+            key = (str(r["dataset"]), str(r["method"]))
+            by.setdefault(key, []).append(float(r["us_per_query"]))
+    t = float(payload.get("meta", {}).get("unix_time", 0.0))
+    return [
+        {
+            "t": t,
+            "bench": payload.get("bench", "?"),
+            "dataset": ds,
+            "method": m,
+            "us_per_query": float(np.median(v)),
+            "n_points": len(v),
+        }
+        for (ds, m), v in sorted(by.items())
+    ]
+
+
+def load_history(path: str) -> list[dict]:
+    """Read a JSONL history file; a missing file is an empty history."""
+    if not os.path.exists(path):
+        return []
+    out = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if line:
+                out.append(json.loads(line))
+    return out
+
+
+def append_history(path: str, entries: list[dict]) -> None:
+    """Append history lines (see ``history_entries``) to a JSONL file."""
+    parent = os.path.dirname(path)
+    if parent:
+        os.makedirs(parent, exist_ok=True)
+    with open(path, "a") as f:
+        for e in entries:
+            f.write(json.dumps(e, sort_keys=True) + "\n")
+
+
+def history_series(entries: list[dict]) -> dict[tuple[str, str], list[float]]:
+    """(dataset, method) -> us_per_query series in file (= run) order."""
+    series: dict[tuple[str, str], list[float]] = {}
+    for e in entries:
+        key = (str(e["dataset"]), str(e["method"]))
+        series.setdefault(key, []).append(float(e["us_per_query"]))
+    return series
+
+
+def rolling_median(values: list[float], window: int) -> float:
+    """Median of the newest ``window`` values (all of them when shorter)."""
+    if not values:
+        return float("nan")
+    return float(np.median(values[-window:]))

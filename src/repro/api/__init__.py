@@ -15,6 +15,7 @@ from repro.api.config import (
     ConfigError,
     IndexConfig,
     LayoutConfig,
+    ObsConfig,
     SearchConfig,
     StreamConfig,
     as_index_config,
@@ -32,8 +33,8 @@ from repro.core.overlap import (
 from repro.deprecation import RepoDeprecationWarning
 
 __all__ = [
-    "Config", "ConfigError", "IndexConfig", "LayoutConfig", "SearchConfig",
-    "StreamConfig", "as_index_config", "make_backend",
+    "Config", "ConfigError", "IndexConfig", "LayoutConfig", "ObsConfig",
+    "SearchConfig", "StreamConfig", "as_index_config", "make_backend",
     "OverlapIndex",
     "PlanCache", "PlanKey", "SearchPlan", "SearchResult",
     "OverlapMethod", "available_overlap_methods", "get_overlap_method",

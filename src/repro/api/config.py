@@ -204,6 +204,34 @@ class LayoutConfig:
 
 
 @dataclass(frozen=True)
+class ObsConfig:
+    """Telemetry knobs (repro.obs): the per-index metrics registry.
+
+    ``enabled=False`` turns the whole layer into shared no-op objects —
+    search results are bitwise-identical either way (metrics are host-side
+    bookkeeping only); the toggle exists for overhead-sensitive benches.
+    ``events_path`` attaches a JSONL span/event log; ``None`` falls back to
+    the ``REPRO_OBS_EVENTS`` environment variable, else events stay off.
+    """
+
+    enabled: bool = True
+    window: int = 2048  # histogram reservoir: exact percentiles up to this
+    events_path: str | None = None  # JSONL event log destination
+
+    def __post_init__(self) -> None:
+        _require(
+            self.window >= 1,
+            f"ObsConfig.window={self.window} must be >= 1 (number of recent "
+            "observations each histogram retains for percentiles)",
+        )
+        _require(
+            self.events_path is None or len(str(self.events_path)) > 0,
+            "ObsConfig.events_path must be a non-empty path or None (None "
+            "defers to $REPRO_OBS_EVENTS, else JSONL events stay off)",
+        )
+
+
+@dataclass(frozen=True)
 class Config:
     """The whole lifecycle in one immutable tree.  ``dataclasses.replace``
     (or the ``.with_()`` convenience) derives variants."""
@@ -212,6 +240,7 @@ class Config:
     search: SearchConfig = field(default_factory=SearchConfig)
     stream: StreamConfig = field(default_factory=StreamConfig)
     layout: LayoutConfig = field(default_factory=LayoutConfig)
+    obs: ObsConfig = field(default_factory=ObsConfig)
 
     def __post_init__(self) -> None:
         for name, want in (
@@ -219,6 +248,7 @@ class Config:
             ("search", SearchConfig),
             ("stream", StreamConfig),
             ("layout", LayoutConfig),
+            ("obs", ObsConfig),
         ):
             got = getattr(self, name)
             if not isinstance(got, want):

@@ -13,9 +13,13 @@ resolved from ``cfg.layout`` (``make_backend``) owns
   * executor bodies  — ``search_body`` / ``ingest_body``: the un-jitted
                        callables the plan layer (api/plan.py) and the
                        facade wrap with trace counters + ``jax.jit``.  The
-                       single backend returns ``core.knn.knn_search_impl``
-                       / ``stream.ingest.ingest_impl``; the sharded backend
-                       returns the ``distributed/knn_island.py`` islands,
+                       single backend wraps ``core.knn.knn_search_impl`` /
+                       ``stream.ingest.ingest_impl``; the sharded backend
+                       returns the ``distributed/knn_island.py`` islands.
+                       Search bodies return ``(dists, ids, SearchStats,
+                       IslandStats)`` — the fourth element is the telemetry
+                       layer's per-island node-access breakdown (one row
+                       per shard; a singleton row on the single layout),
   * swap barrier     — ``barrier``: the sharded layout blocks until every
                        shard's new arrays are materialized before a
                        maintenance rebuild swaps them in, keeping
@@ -37,7 +41,12 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.api.config import ConfigError, LayoutConfig
 from repro.core.forest import ForestArrays
-from repro.core.knn import DeviceForest, device_forest, knn_search_impl
+from repro.core.knn import (
+    DeviceForest,
+    IslandStats,
+    device_forest,
+    knn_search_impl,
+)
 from repro.kernels import ops as kops
 from repro.stream.ingest import DeltaBuffer, ingest_impl
 
@@ -64,10 +73,18 @@ class SingleDeviceBackend:
 
     def search_body(self, key):
         def body(forest, q, delta):
-            return knn_search_impl(
+            d, i, s = knn_search_impl(
                 forest, q, k=key.k, mode=key.mode, beam=key.beam,
                 kernel=key.kernel, delta=delta,
             )
+            # one island: the per-island telemetry view is the fleet view
+            # with a leading singleton dim (free — no extra device work)
+            isl = IslandStats(
+                buckets_visited=s.buckets_visited[None],
+                distances=s.distances[None],
+                bound_distances=s.bound_distances[None],
+            )
+            return d, i, s, isl
 
         return body
 
@@ -187,6 +204,7 @@ class ShardedBackend:
             return self._island.sharded_search(
                 self.mesh, self.axis, forest, q, delta,
                 k=key.k, mode=key.mode, beam=key.beam, kernel=key.kernel,
+                per_island=True,
             )
 
         return body

@@ -53,6 +53,7 @@ from repro.core.pipeline import (
     build_index_core,
     default_delta_capacity,
 )
+from repro.obs import EventLog, Registry, events_path_from_env
 from repro.stream.ingest import (
     DeltaBuffer,
     alloc_delta,
@@ -138,7 +139,16 @@ class OverlapIndex:
                 # over the restart-time dataset would shift object-based
                 # trigger decisions mid-stream
                 self.monitor.rates_baseline = np.asarray(monitor_baseline)
-        self.plans = PlanCache()
+        # one telemetry registry per index: every layer below (plan cache,
+        # spans, ingest/maintenance counters, per-island node accesses)
+        # registers here; ``metrics()`` is the single snapshot of it all
+        events_path = cfg.obs.events_path or events_path_from_env()
+        self.obs = Registry(
+            enabled=cfg.obs.enabled,
+            window=cfg.obs.window,
+            events=None if events_path is None else EventLog(events_path),
+        )
+        self.plans = PlanCache(registry=self.obs)
         self.rebuild_log: list[dict[str, Any]] = rebuild_log or []
         return self
 
@@ -244,16 +254,46 @@ class OverlapIndex:
     ) -> tuple[Any, Any, SearchStats]:
         """Raw device triple (dists, ids, SearchStats) through the plan
         cache — the serving/benchmark path that stays on device."""
-        d, i, s, _ = self._search_planned(q, k=k, mode=mode, beam=beam, kernel=kernel)
+        with self.obs.span("search"):
+            d, i, s, _, _ = self._search_planned(
+                q, k=k, mode=mode, beam=beam, kernel=kernel
+            )
         return d, i, s
 
     def _search_planned(self, q, *, k=None, mode=None, beam=None, kernel=None):
-        key = self._plan_key(k, mode, beam, kernel)
-        plan = self.plans.plan(key, self.backend)
-        plan.calls += 1
-        delta = None if self._delta is None else delta_view(self._delta)
-        d, i, s = plan.executor(self.device, jnp.asarray(q, jnp.float32), delta)
-        return d, i, s, plan
+        # phase spans nest under whichever outer span is active ("search"
+        # from both public entries), giving search/plan_lookup and
+        # search/device_execute histograms.  NB: device_execute times the
+        # DISPATCH — on an async accelerator completion lands in the
+        # caller's host_transfer span (the first blocking read).
+        with self.obs.span("plan_lookup"):
+            key = self._plan_key(k, mode, beam, kernel)
+            plan = self.plans.plan(key, self.backend)
+            plan.calls += 1
+            delta = None if self._delta is None else delta_view(self._delta)
+        with self.obs.span("device_execute"):
+            d, i, s, isl = plan.executor(
+                self.device, jnp.asarray(q, jnp.float32), delta
+            )
+        return d, i, s, isl, plan
+
+    def _record_search(self, stats: dict[str, Any], isl) -> None:
+        """Fold one search's host-side stats into the registry: fleet
+        node-access counters plus the per-island breakdown the sharded
+        executor reports (load balance across shards)."""
+        obs = self.obs
+        obs.counter("search.queries").inc(len(stats["buckets_visited"]))
+        for name in ("buckets_visited", "distances", "bound_distances"):
+            obs.counter(f"search.{name}").inc(int(stats[name].sum()))
+        if isl is None:
+            return
+        isl = jax.device_get(isl)
+        method = self.cfg.index.method
+        for s_id in range(isl.buckets_visited.shape[0]):
+            for name in ("buckets_visited", "distances", "bound_distances"):
+                obs.counter(
+                    f"search.island.{name}", island=s_id, method=method
+                ).inc(int(getattr(isl, name)[s_id].sum()))
 
     def search(
         self, q, *, k: int | None = None, mode: str | None = None,
@@ -262,14 +302,20 @@ class OverlapIndex:
         """kNN over forest + streaming delta.  Defaults come from
         ``cfg.search``; per-call overrides select (or create) the matching
         cached ``SearchPlan``.  Returns a host-side ``SearchResult``."""
-        d, i, s, plan = self._search_planned(
-            q, k=k, mode=mode, beam=beam, kernel=kernel
-        )
-        d, i = np.asarray(d), np.asarray(i)
+        obs = self.obs
+        with obs.span("search"):
+            d, i, s, isl, plan = self._search_planned(
+                q, k=k, mode=mode, beam=beam, kernel=kernel
+            )
+            with obs.span("host_transfer"):
+                d, i = np.asarray(d), np.asarray(i)
+                stats = stats_to_host(s)
+            if obs.enabled:
+                self._record_search(stats, isl)
         kk = min(plan.key.k, self.n_total)  # Def. 4: |X| <= k -> whole set
         if d.shape[1] > kk:
             d, i = d[:, :kk], i[:, :kk]
-        return SearchResult(dists=d, ids=i, stats=stats_to_host(s), plan=plan)
+        return SearchResult(dists=d, ids=i, stats=stats, plan=plan)
 
     # -- write path ----------------------------------------------------------
     def _ensure_delta(self) -> None:
@@ -351,10 +397,12 @@ class OverlapIndex:
         self._x_parts.append(xb)
         self.n_total += len(xb)
         self._x_cache = None
-        for lo in range(0, len(xb), self.capacity):
-            self._ingest_chunk(
-                xb[lo : lo + self.capacity], ids[lo : lo + self.capacity]
-            )
+        with self.obs.span("ingest"):
+            self.obs.counter("ingest.points").inc(len(xb))
+            for lo in range(0, len(xb), self.capacity):
+                self._ingest_chunk(
+                    xb[lo : lo + self.capacity], ids[lo : lo + self.capacity]
+                )
         return ids
 
     def _ingest_chunk(self, xc: np.ndarray, ic: np.ndarray) -> None:
@@ -380,14 +428,16 @@ class OverlapIndex:
         run = self._ingest_executor()
         for _ in range(self.forest.n_indexes + 1):
             self._ingest_calls += 1
-            self._delta, acc = run(
-                self.device.index_centers, self._delta, xj, ij,
-                jnp.asarray(pending),
-            )
-            pending &= ~np.asarray(acc)
+            with self.obs.span("device_execute"):
+                self._delta, acc = run(
+                    self.device.index_centers, self._delta, xj, ij,
+                    jnp.asarray(pending),
+                )
+                pending &= ~np.asarray(acc)
             if not pending.any():
                 return
             # capacity hit: force-rebuild the rejecting indexes, retry rest
+            self.obs.counter("ingest.capacity_retries").inc()
             meta = pull_delta_meta(self.delta)
             full = [
                 i for i in range(self.forest.n_indexes) if meta["dropped"][i] > 0
@@ -402,8 +452,18 @@ class OverlapIndex:
     def check(self):
         """Overlap-drift evaluation only (no rebuild) -> DriftReport."""
         self._ensure_delta()
-        needs_x = get_overlap_method(self.cfg.stream.monitor_method).needs_objects
-        return self.monitor.check(self.delta, x=self.x_all if needs_x else None)
+        with self.obs.span("check"):
+            needs_x = get_overlap_method(
+                self.cfg.stream.monitor_method
+            ).needs_objects
+            report = self.monitor.check(
+                self.delta, x=self.x_all if needs_x else None
+            )
+        self.obs.counter("maintain.checks").inc()
+        for reasons in report.reasons.values():
+            for why in reasons:
+                self.obs.counter("maintain.triggers", reason=why).inc()
+        return report
 
     def maintain(self):
         """Run the drift monitor; rebuild + hot-swap every triggered index.
@@ -411,16 +471,21 @@ class OverlapIndex:
         The swap is atomic: queries see the old (device, delta) pair or the
         new pair, never a partial state.  Returns the DriftReport.
         """
-        report = self.check()
-        if report.triggers:
-            self._rebuild(report.triggers, report)
+        with self.obs.span("maintain"):
+            report = self.check()
+            if report.triggers:
+                self._rebuild(report.triggers, report)
         return report
 
     def _rebuild(self, triggers: list[int], report=None) -> None:
-        from repro.stream.maintenance import rebuild_indexes
-
         if not triggers:
             return
+        with self.obs.span("rebuild"):
+            self._rebuild_impl(triggers, report)
+
+    def _rebuild_impl(self, triggers: list[int], report) -> None:
+        from repro.stream.maintenance import rebuild_indexes
+
         x_all = self.x_all
         new_forest, stats = rebuild_indexes(
             self.forest, self.delta, x_all, triggers, self._maint_cfg()
@@ -462,6 +527,11 @@ class OverlapIndex:
         stats["reasons"] = dict(report.reasons) if report is not None else {}
         stats["n_migrated"] = n_migrated
         self.rebuild_log.append(stats)
+        self.obs.counter("maintain.rebuilds").inc(len(triggers))
+        self.obs.counter("maintain.migrated").inc(n_migrated)
+        self.obs.histogram("maintain.rebuild_wall_s").observe(
+            stats["wall_time_s"]
+        )
 
     # -- persistence ---------------------------------------------------------
     def save(self, path) -> str:
@@ -520,6 +590,72 @@ class OverlapIndex:
         )
 
     # -- introspection -------------------------------------------------------
+    def metrics(self) -> dict[str, Any]:
+        """ONE nested telemetry snapshot of this index (JSON-serializable).
+
+        Sections:
+          search       per-phase span histograms (``search``,
+                       ``search/plan_lookup``, ``search/device_execute``,
+                       ``search/host_transfer``) with p50/p95/p99 seconds;
+          plan_cache   compiled-executor table counters (hits/misses/
+                       evictions/lifetime traces);
+          ingest       write-path counters (compiled traces, executor calls,
+                       points ingested, capacity-retry rounds);
+          maintenance  drift-monitor checks, per-reason trigger counts
+                       (overlap/drift/fill/overflow), rebuild totals;
+          islands      per-executor-island node-access counters — the
+                       paper's cost currency (buckets_visited / distances /
+                       bound_distances) per shard, one island on the single
+                       layout;
+          registry     the raw registry snapshot (every counter/gauge/
+                       histogram, including span paths not listed above).
+
+        With ``cfg.obs.enabled=False`` the structural sections (plan_cache,
+        ingest traces/calls, rebuilds) remain — their counters predate the
+        registry — and the registry-backed ones are empty.
+        """
+        obs = self.obs
+        snap = obs.snapshot()
+        counters = obs.counters()
+        islands: dict[int, dict[str, int]] = {}
+        triggers: dict[str, int] = {}
+        for (name, labels), val in counters.items():
+            if name.startswith("search.island."):
+                lab = dict(labels)
+                islands.setdefault(int(lab["island"]), {})[
+                    name[len("search.island."):]
+                ] = val
+            elif name == "maintain.triggers":
+                triggers[dict(labels).get("reason", "?")] = val
+        return {
+            "enabled": obs.enabled,
+            "search": {
+                "spans": {
+                    k: v for k, v in snap["histograms"].items()
+                    if k == "search" or k.startswith("search/")
+                },
+                "queries": obs.value("search.queries"),
+                "buckets_visited": obs.value("search.buckets_visited"),
+                "distances": obs.value("search.distances"),
+                "bound_distances": obs.value("search.bound_distances"),
+            },
+            "plan_cache": self.plans.stats(),
+            "ingest": {
+                **self.ingest_stats(),
+                "points": obs.value("ingest.points"),
+                "capacity_retries": obs.value("ingest.capacity_retries"),
+            },
+            "maintenance": {
+                "checks": obs.value("maintain.checks"),
+                "triggers": triggers,
+                "rebuilds": len(self.rebuild_log),
+                "indexes_rebuilt": obs.value("maintain.rebuilds"),
+                "migrated": obs.value("maintain.migrated"),
+            },
+            "islands": islands,
+            "registry": snap,
+        }
+
     def structure(self) -> dict[str, Any]:
         """aggregate_structure + live delta occupancy (always fresh)."""
         s = self.forest.aggregate_structure()

@@ -52,14 +52,17 @@ class PlanKey(NamedTuple):
 class SearchPlan:
     """A compiled search program for one ``PlanKey``.
 
-    ``executor(device_forest, q, delta)`` returns the raw device triple
-    ``(dists, ids, SearchStats)``.  ``traces`` counts actual jax traces
-    (option tuple is fixed, so a trace means a new operand shape/dtype);
-    ``calls`` counts executions through this plan.
+    ``executor(device_forest, q, delta)`` returns the raw device 4-tuple
+    ``(dists, ids, SearchStats, IslandStats | None)`` — the fourth element
+    carries per-executor-island node-access counters (leading dim = shard
+    count; the single layout reports one island) for the telemetry layer,
+    or ``None`` on the legacy backend-less path.  ``traces`` counts actual
+    jax traces (option tuple is fixed, so a trace means a new operand
+    shape/dtype); ``calls`` counts executions through this plan.
     """
 
     key: PlanKey
-    executor: Callable[..., tuple[Any, Any, SearchStats]] = None  # set below
+    executor: Callable[..., tuple[Any, ...]] = None  # set below
     traces: int = 0
     calls: int = 0
 
@@ -67,12 +70,14 @@ class SearchPlan:
 def _build_plan(key: PlanKey, backend=None) -> SearchPlan:
     plan = SearchPlan(key=key)
     if backend is None:
-        # no layout backend (legacy/direct use): the single-device executor
+        # no layout backend (legacy/direct use): the single-device executor,
+        # normalized to the 4-tuple contract (no island breakdown)
         def body(forest: DeviceForest, q, delta: DeltaView | None):
-            return knn_search_impl(
+            d, i, s = knn_search_impl(
                 forest, q, k=key.k, mode=key.mode, beam=key.beam,
                 kernel=key.kernel, delta=delta,
             )
+            return d, i, s, None
     else:
         body = backend.search_body(key)
 
@@ -95,7 +100,7 @@ class PlanCache:
     sane working set of option tuples, so eviction only fires on
     pathological churn (e.g. a distinct k per call)."""
 
-    def __init__(self, max_plans: int = 64) -> None:
+    def __init__(self, max_plans: int = 64, *, registry=None) -> None:
         if max_plans < 1:
             raise ValueError(f"max_plans={max_plans} must be >= 1")
         self._plans: OrderedDict[PlanKey, SearchPlan] = OrderedDict()
@@ -103,17 +108,32 @@ class PlanCache:
         self.hits = 0
         self.misses = 0
         self.evictions = 0
+        self.evicted_traces = 0  # lifetime traces of plans no longer cached
+        # optional repro.obs.Registry: hit/miss/eviction counters register
+        # into the owner's telemetry namespace alongside the local ints
+        self._obs = registry
+
+    def _count(self, name: str) -> None:
+        if self._obs is not None:
+            self._obs.counter(name).inc()
 
     def plan(self, key: PlanKey, backend=None) -> SearchPlan:
         got = self._plans.get(key)
         if got is None:
             self.misses += 1
+            self._count("plan_cache.misses")
             got = self._plans[key] = _build_plan(key, backend)
             if len(self._plans) > self.max_plans:
-                self._plans.popitem(last=False)  # evict least recently used
+                # evict least recently used — but fold its trace count into
+                # the lifetime accumulator first: stats()["traces"] reports
+                # compilations PAID, which eviction must not un-count
+                _, evicted = self._plans.popitem(last=False)
+                self.evicted_traces += evicted.traces
                 self.evictions += 1
+                self._count("plan_cache.evictions")
         else:
             self.hits += 1
+            self._count("plan_cache.hits")
             self._plans.move_to_end(key)
         return got
 
@@ -133,7 +153,10 @@ class PlanCache:
             hits=self.hits,
             misses=self.misses,
             evictions=self.evictions,
-            traces=sum(p.traces for p in self._plans.values()),
+            # lifetime compilations: live plans + plans eviction dropped
+            # (evicted_traces keeps the total monotone across LRU churn)
+            traces=self.evicted_traces
+            + sum(p.traces for p in self._plans.values()),
         )
 
 
@@ -162,12 +185,17 @@ class SearchResult:
 
 def stats_to_host(s: SearchStats) -> dict[str, Any]:
     """SearchStats device arrays -> the host dict shape the benchmarks and
-    the legacy ``knn_search_host`` wrapper always reported."""
+    the legacy ``knn_search_host`` wrapper always reported.
+
+    ONE ``jax.device_get`` of the whole NamedTuple: per-field ``np.asarray``
+    issued six blocking device->host transfers (each waiting on the same
+    executor) where a single batched fetch does."""
+    host = jax.device_get(s)
     return {
-        "buckets_visited": np.asarray(s.buckets_visited),
-        "distances": np.asarray(s.distances),
-        "bound_distances": np.asarray(s.bound_distances),
-        "padded_distances": np.asarray(s.padded_distances),
-        "comparisons": np.asarray(s.comparisons),
-        "steps": int(s.steps),
+        "buckets_visited": host.buckets_visited,
+        "distances": host.distances,
+        "bound_distances": host.bound_distances,
+        "padded_distances": host.padded_distances,
+        "comparisons": host.comparisons,
+        "steps": int(host.steps),
     }

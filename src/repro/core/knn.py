@@ -102,6 +102,22 @@ class SearchStats(NamedTuple):
     steps: Array  # () i32  while-loop trip count
 
 
+class IslandStats(NamedTuple):
+    """Per-executor-island node-access counters (leading dim = islands).
+
+    The paper's cost currency — bucket/node accesses and bound distance
+    evaluations — broken down by WHICH executor island did the work: one
+    row per shard under the sharded layout (each shard scans its local
+    bucket rows, so the rows expose load balance), a single row on the
+    single-device layout.  ``SearchStats`` stays the fleet total; this is
+    the telemetry layer's per-island view (``OverlapIndex.metrics()``).
+    """
+
+    buckets_visited: Array  # (S, Q) i32 per-shard bucket visits
+    distances: Array  # (S, Q) i32 per-shard useful object distances
+    bound_distances: Array  # (S, Q) i32 per-shard routing + bound distances
+
+
 def device_forest(f: ForestArrays, *, quantize: bool = False) -> DeviceForest:
     """Upload the flattened forest; ``quantize=True`` stores bucket members
     int8 with per-member scales (kernels/ops.quantize_datastore layout) —

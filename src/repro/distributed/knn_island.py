@@ -99,9 +99,13 @@ def sharded_search(
     mode: str = "forest",
     beam: int = 1,
     kernel: bool = True,
-) -> tuple[Array, Array, cknn.SearchStats]:
+    per_island: bool = False,
+) -> tuple[Array, ...]:
     """Sharded twin of ``core.knn.knn_search_impl`` — same signature shape,
-    same return triple, bitwise-identical results.
+    same return triple, bitwise-identical results.  ``per_island=True``
+    appends a fourth element, ``core.knn.IslandStats`` with one row per
+    shard, exposing which island paid which node accesses (the telemetry
+    layer's load-balance view; the summed ``SearchStats`` is unchanged).
 
     TWO ``shard_map`` regions, not one: the bounds island (routing +
     eligibility + pivot lower bounds + the SORTED visit order) and the scan
@@ -117,9 +121,11 @@ def sharded_search(
     Each shard routes the (replicated) queries, scans its local bucket rows
     and local delta rows with the shared ``scan_sorted`` body, then the
     k-per-shard carries merge via ``merge_shard_topk``.  Per-query cost
-    counters are ``psum``-reduced so the paper's instrumentation reports
-    fleet totals; ``steps`` sums per-shard trip counts (each shard's bounded
-    scan terminates on its local bound ordering, so the total can legally
+    counters leave the island as stacked per-shard rows and are summed
+    outside it (an int32 sum — the same fleet totals the old in-island
+    ``psum`` produced) so the per-island breakdown stays available;
+    ``steps`` sums per-shard trip counts (each shard's bounded scan
+    terminates on its local bound ordering, so the total can legally
     exceed the single-device count even though the RESULTS are identical).
     """
     S = mesh.shape[axis]
@@ -175,9 +181,11 @@ def sharded_search(
         top_d, top_i = cknn.merge_shard_topk(
             out.top_d, out.top_i, k=kk, axis_name=axis
         )
-        ps = functools.partial(jax.lax.psum, axis_name=axis)
-        return (top_d, top_i, ps(out.visits), ps(out.ndist), ps(out.npad),
-                ps(out.steps))
+        # counters leave as explicit (1, Q) shard rows (stacked to (S, Q)
+        # by the out_spec) instead of psum-replicated totals: the caller
+        # sums them for SearchStats AND keeps the per-island breakdown
+        return (top_d, top_i, out.visits[None], out.ndist[None],
+                out.npad[None], out.steps[None])
 
     fspec = forest_specs(forest, axis)
     dspec = None if delta is None else delta_view_specs(axis)
@@ -198,32 +206,40 @@ def sharded_search(
         mesh=mesh,
         in_specs=(fspec, P(), dspec, col, col,
                   col if have_delta else None, col if have_delta else None),
-        out_specs=(P(), P(), P(), P(), P(), P()),
+        out_specs=(P(), P(), row, row, row, P(axis)),
         check_vma=False,
     )
 
     bout = bounds_fn(forest, q, delta)
     route_d, route_c, order, lbs, n_elig = bout[:5]
     dorder = dlbs = None
-    n_elig_d = jnp.zeros((qn,), jnp.int32)
+    n_elig_d_s = jnp.zeros((S, qn), jnp.int32)
     if have_delta:
         dorder, dlbs, n_elig_d_s = bout[5:]
-        n_elig_d = jnp.sum(n_elig_d_s, axis=0, dtype=jnp.int32)
-    top_d, top_i, visits, ndist, npad, steps = scan_fn(
+    top_d, top_i, visits_s, ndist_s, npad_s, steps_s = scan_fn(
         forest, q, delta, order, lbs, dorder, dlbs
     )
     merged = cknn.ScanOut(
         top_d=top_d,
         top_i=top_i,
-        visits=visits,
-        ndist=ndist,
-        npad=npad,
-        steps=steps,
+        visits=jnp.sum(visits_s, axis=0, dtype=jnp.int32),
+        ndist=jnp.sum(ndist_s, axis=0, dtype=jnp.int32),
+        npad=jnp.sum(npad_s, axis=0, dtype=jnp.int32),
+        steps=jnp.sum(steps_s, dtype=jnp.int32),
         n_elig=jnp.sum(n_elig, axis=0, dtype=jnp.int32),
-        n_elig_d=n_elig_d,
+        n_elig_d=jnp.sum(n_elig_d_s, axis=0, dtype=jnp.int32),
     )
     stats = cknn.scan_stats(route_d[0], route_c[0], merged, kk=kk)
-    return jnp.sqrt(top_d), top_i, stats
+    if not per_island:
+        return jnp.sqrt(top_d), top_i, stats
+    # per-shard bound work: every shard routes the replicated queries itself
+    # (route_d rows) and bounds its own eligible bucket/delta rows
+    island = cknn.IslandStats(
+        buckets_visited=visits_s,
+        distances=ndist_s,
+        bound_distances=route_d + n_elig + n_elig_d_s,
+    )
+    return jnp.sqrt(top_d), top_i, stats, island
 
 
 def sharded_ingest(

@@ -1,0 +1,28 @@
+"""Unified telemetry layer: metrics registry, phase spans, JSONL events.
+
+    from repro.obs import Registry
+
+    reg = Registry()
+    with reg.span("search"):
+        with reg.span("device_execute"):
+            ...                       # -> histogram "search/device_execute"
+    reg.counter("search.queries").inc(64)
+    reg.gauge("serve.queue_depth").set(3)
+    reg.snapshot()                    # one nested, JSON-serializable dict
+
+Consumed by ``repro.api.OverlapIndex`` (per-phase search/ingest/maintain
+spans + per-island node-access counters, exposed via ``.metrics()``) and
+``repro.serve.ServeEngine`` (latency histograms + queue/slot gauges).
+See README.md in this directory for metric names and overhead notes.
+"""
+from repro.obs.events import EventLog, events_path_from_env
+from repro.obs.metrics import Counter, Gauge, Histogram, Registry
+
+__all__ = [
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "Registry",
+    "EventLog",
+    "events_path_from_env",
+]

@@ -1,0 +1,81 @@
+"""Toggleable JSONL event emitter — the registry's wire format.
+
+One ``EventLog`` appends one JSON object per line to a file; ``Registry``
+span exits (obs/metrics.py) and any caller with something structured to
+say (``emit`` takes an arbitrary JSON-serializable dict) share it.  Lines
+are self-contained — each carries a wall-clock ``ts`` — so logs from
+several processes concatenate and sort cleanly.
+
+Off by default: nothing opens a file unless an ``events_path`` is
+configured (``ObsConfig.events_path`` or the ``REPRO_OBS_EVENTS``
+environment variable), so the metrics layer stays filesystem-free in the
+common case.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Any
+
+__all__ = ["EventLog", "events_path_from_env"]
+
+ENV_VAR = "REPRO_OBS_EVENTS"
+
+
+def events_path_from_env() -> str | None:
+    """The ambient JSONL destination, if any (empty string means off)."""
+    return os.environ.get(ENV_VAR) or None
+
+
+class EventLog:
+    """Append-only JSONL writer with line-level durability.
+
+    ``emit`` stamps ``ts`` (unix seconds) and writes exactly one line per
+    event, flushing by default so a crash mid-run loses at most the event
+    being written — these logs exist to debug exactly such runs.
+    """
+
+    def __init__(self, path: str, *, flush: bool = True) -> None:
+        self.path = str(path)
+        self._flush = flush
+        parent = os.path.dirname(self.path)
+        if parent:
+            os.makedirs(parent, exist_ok=True)
+        self._f = open(self.path, "a")
+
+    def emit(self, event: dict[str, Any]) -> None:
+        rec = {"ts": time.time(), **event}
+        self._f.write(json.dumps(rec, sort_keys=True) + "\n")
+        if self._flush:
+            self._f.flush()
+
+    def close(self) -> None:
+        if not self._f.closed:
+            self._f.close()
+
+    def __enter__(self) -> "EventLog":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def __del__(self) -> None:  # best-effort: drop the fd with the object
+        try:
+            self.close()
+        except Exception:
+            pass
+
+    @staticmethod
+    def read(path: str) -> list[dict[str, Any]]:
+        """Parse a JSONL event file back into dicts (round-trip of ``emit``).
+
+        Skips blank lines; raises on malformed JSON — a corrupt event log
+        should fail loudly in tooling, not silently truncate."""
+        out: list[dict[str, Any]] = []
+        with open(path) as f:
+            for line in f:
+                line = line.strip()
+                if line:
+                    out.append(json.loads(line))
+        return out

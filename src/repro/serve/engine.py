@@ -14,7 +14,10 @@ Production behaviors implemented:
   between decode steps — one engine serves IoT-style read+write load.
   The datastore is an ARGUMENT of the jitted decode step (not a closure
   capture): delta shapes are fixed at build, so ingest swaps buffer
-  contents without a single recompile.
+  contents without a single recompile;
+* telemetry (repro.obs): request/ingest latency histograms with serving
+  percentiles, queue-depth and slot-occupancy gauges, prefill/decode-step
+  span timings — ``engine.metrics()`` snapshots them all.
 
 Single-host implementation of the multi-host pattern: on a real mesh the
 same engine runs with params/caches sharded exactly as in the dry-run.
@@ -30,6 +33,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.model import Model
+from repro.obs import Registry
 from repro.serve.retrieval import Datastore, ForestDatastore, ingest_keys
 
 PyTree = Any
@@ -73,6 +77,7 @@ class ServeEngine:
         max_len: int = 256,
         datastore: Datastore | None = None,
         greedy: bool = True,
+        registry: Registry | None = None,
     ):
         self.model = model
         self.params = params
@@ -87,6 +92,17 @@ class ServeEngine:
         self.ingest_queue: list[IngestRequest] = []
         self._decode = jax.jit(self._decode_step)
         self.steps = 0
+        # serving telemetry (repro.obs): request/ingest latency percentile
+        # histograms + queue-depth / slot-occupancy gauges replace the old
+        # scatter of per-request perf_counter fields as the ENGINE's view
+        # (requests keep their latency_s for per-request callers)
+        self.obs = registry if registry is not None else Registry()
+
+    def metrics(self) -> dict[str, Any]:
+        """One snapshot of the engine's registry: ``serve.*`` latency
+        histograms (seconds, p50/p95/p99), queue/slot gauges, and step/
+        token counters."""
+        return self.obs.snapshot()
 
     # --- jitted single step over all slots -------------------------------
     # ``datastore`` is a traced argument: ingest swaps in new delta contents
@@ -120,14 +136,18 @@ class ServeEngine:
                 # decode requests must survive a misdirected insert)
                 req.accepted = 0
                 req.error = "datastore does not accept streaming inserts"
+                self.obs.counter("serve.ingest_errors").inc()
             else:
-                self.datastore, n_acc = ingest_keys(
-                    self.datastore, jnp.asarray(req.keys, jnp.float32),
-                    jnp.asarray(req.values, jnp.int32),
-                )
+                with self.obs.span("serve.ingest"):
+                    self.datastore, n_acc = ingest_keys(
+                        self.datastore, jnp.asarray(req.keys, jnp.float32),
+                        jnp.asarray(req.values, jnp.int32),
+                    )
                 req.accepted = n_acc
+                self.obs.counter("serve.ingested_keys").inc(n_acc)
             req.done = True
             req.latency_s = time.perf_counter() - t0
+            self.obs.histogram("serve.ingest_latency_s").observe(req.latency_s)
             done.append(req)
         return done
 
@@ -138,9 +158,10 @@ class ServeEngine:
             req = self.queue.pop(0)
             req._t0 = time.perf_counter()
             prompt = jnp.asarray(req.prompt[None, :], jnp.int32)
-            logits, cache1 = self.model.prefill(
-                self.params, {"tokens": prompt}, max_len=self.max_len
-            )
+            with self.obs.span("serve.prefill"):
+                logits, cache1 = self.model.prefill(
+                    self.params, {"tokens": prompt}, max_len=self.max_len
+                )
             # merge the single-row cache into this slot's lane
             self.cache = jax.tree.map(
                 lambda full, one: jax.lax.dynamic_update_slice_in_dim(
@@ -168,6 +189,13 @@ class ServeEngine:
             finished.extend(self._drain_ingest())
             self._fill_slots()
             live = [s for s in range(self.num_slots) if self.slot_req[s] is not None]
+            self.obs.gauge("serve.queue_depth").set(len(self.queue))
+            self.obs.gauge("serve.ingest_queue_depth").set(
+                len(self.ingest_queue)
+            )
+            self.obs.gauge("serve.slot_occupancy").set(
+                len(live) / self.num_slots
+            )
             if not live:
                 break
             # per-slot positions: a freshly refilled slot with a shorter
@@ -178,12 +206,15 @@ class ServeEngine:
             tokens = np.zeros((self.num_slots, 1), np.int32)
             for s in live:
                 tokens[s, 0] = self.slot_req[s].out_tokens[-1]
-            nxt, self.cache = self._decode(
-                self.params, jnp.asarray(tokens), self.cache,
-                jnp.asarray(self.slot_pos), self.datastore,
-            )
+            with self.obs.span("serve.decode_step"):
+                nxt, self.cache = self._decode(
+                    self.params, jnp.asarray(tokens), self.cache,
+                    jnp.asarray(self.slot_pos), self.datastore,
+                )
+                nxt = np.asarray(nxt)  # block: the step's real wall time
             self.steps += 1
-            nxt = np.asarray(nxt)
+            self.obs.counter("serve.steps").inc()
+            self.obs.counter("serve.tokens").inc(len(live))
             for s in live:
                 req = self.slot_req[s]
                 req.out_tokens.append(int(nxt[s]))
@@ -192,6 +223,9 @@ class ServeEngine:
                         or self.slot_pos[s] >= self.max_len - 1:
                     req.done = True
                     req.latency_s = time.perf_counter() - req._t0
+                    self.obs.histogram("serve.request_latency_s").observe(
+                        req.latency_s
+                    )
                     finished.append(req)
                     self.slot_req[s] = None
                     self.slot_pos[s] = 0

@@ -1,0 +1,189 @@
+"""Rolling-median bench regression gate tests (benchmarks/check_regress.py
++ the history substrate in benchmarks/common.py): stable history passes, a
+single noisy spike passes, a SUSTAINED 2x regression fails, short history
+is warn-only, seeding + --update materialize correctly, and the JSONL
+round-trip preserves series order."""
+import json
+import sys
+
+import pytest
+
+sys.path.insert(0, ".")  # benchmarks/ is a top-level package, not under src
+
+from benchmarks.check_regress import (  # noqa: E402
+    INSUFFICIENT,
+    OK,
+    REGRESSED,
+    check_series,
+    main,
+    run_check,
+)
+from benchmarks.common import (  # noqa: E402
+    append_history,
+    history_entries,
+    history_series,
+    load_history,
+    rolling_median,
+)
+
+
+def _payload(us: float, *, t: float = 1.0) -> dict:
+    """A minimal BENCH_search artifact: one (dataset, method) series, a
+    k sweep of two records around ``us``."""
+    return {
+        "bench": "search",
+        "meta": {"unix_time": t},
+        "records": [
+            {"name": "a", "dataset": "Tracking", "method": "vbm",
+             "k": 5, "us_per_query": us * 0.9},
+            {"name": "b", "dataset": "Tracking", "method": "vbm",
+             "k": 20, "us_per_query": us * 1.1},
+            {"name": "plans", "dataset": "Tracking"},  # no us -> ignored
+        ],
+    }
+
+
+# ---------------------------------------------------------------------------
+# history substrate
+# ---------------------------------------------------------------------------
+
+
+def test_history_entries_median_over_k_sweep():
+    (e,) = history_entries(_payload(50.0, t=7.0))
+    assert e["dataset"] == "Tracking" and e["method"] == "vbm"
+    assert e["us_per_query"] == pytest.approx(50.0)  # median of 45, 55
+    assert e["n_points"] == 2 and e["t"] == 7.0
+
+
+def test_history_jsonl_roundtrip(tmp_path):
+    p = str(tmp_path / "h.jsonl")
+    assert load_history(p) == []  # missing file is empty history
+    append_history(p, history_entries(_payload(10.0)))
+    append_history(p, history_entries(_payload(20.0)))
+    series = history_series(load_history(p))
+    assert series[("Tracking", "vbm")] == pytest.approx([10.0, 20.0])
+
+
+def test_rolling_median_window():
+    assert rolling_median([1, 2, 3, 100, 100, 100], 3) == 100.0
+    assert rolling_median([1, 2, 3], 10) == 2.0
+
+
+# ---------------------------------------------------------------------------
+# verdict logic (check_series): last element is the run under test
+# ---------------------------------------------------------------------------
+
+STABLE = [50.0] * 12
+
+
+def test_stable_series_ok():
+    status, d = check_series(STABLE + [50.0], window=5, threshold=1.5,
+                             min_runs=10)
+    assert status == OK and d["ratio"] == pytest.approx(1.0)
+
+
+def test_single_spike_does_not_trip():
+    # one 10x-slow run cannot move a 5-run window median
+    status, _ = check_series(STABLE + [500.0], window=5, threshold=1.5,
+                             min_runs=10)
+    assert status == OK
+
+
+def test_sustained_regression_trips():
+    status, d = check_series(STABLE + [100.0] * 5, window=5, threshold=1.5,
+                             min_runs=10)
+    assert status == REGRESSED and d["ratio"] == pytest.approx(2.0)
+
+
+def test_short_history_is_warn_only():
+    status, d = check_series([50.0] * 4, window=5, threshold=1.5, min_runs=10)
+    assert status == INSUFFICIENT
+    assert d["runs"] == 4 and d["min_runs"] == 10
+    # even a huge value cannot fail below min_runs
+    status, _ = check_series([50.0] * 3 + [5000.0], window=5, threshold=1.5,
+                             min_runs=10)
+    assert status == INSUFFICIENT
+
+
+def test_window_worth_of_runs_but_no_baseline_is_insufficient():
+    # min_runs satisfied but nothing OLDER than the window to compare to
+    status, _ = check_series([50.0] * 5, window=5, threshold=1.5, min_runs=5)
+    assert status == INSUFFICIENT
+
+
+# ---------------------------------------------------------------------------
+# run_check end to end (CLI semantics)
+# ---------------------------------------------------------------------------
+
+
+def _write(path, payload):
+    with open(path, "w") as f:
+        json.dump(payload, f)
+
+
+def test_gate_passes_then_fails_on_sustained_2x(tmp_path):
+    art = str(tmp_path / "BENCH_search.json")
+    hist = str(tmp_path / "hist.jsonl")
+    for _ in range(12):
+        append_history(hist, history_entries(_payload(50.0)))
+    _write(art, _payload(50.0))
+    assert run_check(art, hist, window=5, gate=True) == 0
+
+    # five sustained 2x runs in history + a 2x run under test -> fail
+    for _ in range(5):
+        append_history(hist, history_entries(_payload(100.0)))
+    _write(art, _payload(100.0))
+    assert run_check(art, hist, window=5, gate=True) == 1
+    # same regression without --gate only warns
+    assert run_check(art, hist, window=5, gate=False) == 0
+
+
+def test_seed_bootstraps_empty_history_warn_only(tmp_path):
+    art = str(tmp_path / "BENCH_search.json")
+    hist = str(tmp_path / "hist.jsonl")  # does not exist
+    seed = str(tmp_path / "seed.jsonl")
+    append_history(seed, history_entries(_payload(50.0)))
+    # a 100x-slow run against a 1-entry seeded history must be warn-only
+    _write(art, _payload(5000.0))
+    assert run_check(art, hist, seed_path=seed, window=5, gate=True,
+                     update=True) == 0
+    # --update materialized the seed + this run into the real history
+    series = history_series(load_history(hist))
+    assert series[("Tracking", "vbm")] == pytest.approx([50.0, 5000.0])
+
+
+def test_update_appends_run_under_test(tmp_path):
+    art = str(tmp_path / "BENCH_search.json")
+    hist = str(tmp_path / "hist.jsonl")
+    _write(art, _payload(50.0))
+    assert run_check(art, hist, update=True) == 0
+    assert run_check(art, hist, update=True) == 0
+    assert len(load_history(hist)) == 2
+
+
+def test_new_series_in_old_history_is_independent(tmp_path):
+    # an unrelated (dataset, method) history must not gate a new series
+    art = str(tmp_path / "BENCH_search.json")
+    hist = str(tmp_path / "hist.jsonl")
+    for _ in range(12):
+        append_history(hist, [dict(t=1.0, bench="search", dataset="WARD",
+                                   method="dbm", us_per_query=1.0,
+                                   n_points=2)])
+    _write(art, _payload(5000.0))  # Tracking/vbm: no history of its own
+    assert run_check(art, hist, window=5, gate=True) == 0
+
+
+def test_cli_main(tmp_path, capsys):
+    art = str(tmp_path / "BENCH_search.json")
+    hist = str(tmp_path / "hist.jsonl")
+    _write(art, _payload(50.0))
+    rc = main(["--artifact", art, "--history", hist, "--update", "--gate"])
+    assert rc == 0
+    out = capsys.readouterr().out
+    assert "warn-only" in out and "appended" in out
+
+
+def test_empty_artifact_is_noop(tmp_path):
+    art = str(tmp_path / "BENCH_search.json")
+    _write(art, {"bench": "search", "meta": {}, "records": []})
+    assert run_check(art, str(tmp_path / "h.jsonl"), gate=True) == 0

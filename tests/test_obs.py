@@ -1,0 +1,319 @@
+"""Telemetry layer (repro.obs) tests: metric primitives, registry
+snapshots, span nesting, JSONL event round-trip, the no-effect guarantee
+(metrics-enabled search bitwise-identical to metrics-off), the facade's
+``OverlapIndex.metrics()`` snapshot shape, and the plan-cache accounting
+fixes that rode along (eviction keeps lifetime traces; ``stats_to_host``
+is one batched device fetch)."""
+import json
+import math
+import threading
+
+import numpy as np
+import pytest
+
+from repro.api import Config, IndexConfig, ObsConfig, OverlapIndex, StreamConfig
+from repro.api.plan import PlanCache, PlanKey, stats_to_host
+from repro.obs import EventLog, Histogram, Registry, events_path_from_env
+
+
+def _cfg(obs: bool = True, **obs_kw) -> Config:
+    return Config(
+        index=IndexConfig(
+            method="vbm", eps=1.5, min_pts=8, xi_min=0.3, xi_max=0.7
+        ),
+        stream=StreamConfig(capacity=64),
+        obs=ObsConfig(enabled=obs, **obs_kw),
+    )
+
+
+# ---------------------------------------------------------------------------
+# primitives
+# ---------------------------------------------------------------------------
+
+
+def test_counter_gauge_basics():
+    reg = Registry()
+    reg.counter("c").inc()
+    reg.counter("c").inc(4)
+    assert reg.value("c") == 5
+    assert reg.value("never_touched") == 0
+    reg.gauge("g").set(2.5)
+    reg.gauge("g").add(-0.5)
+    assert reg.snapshot()["gauges"]["g"] == 2.0
+
+
+def test_counter_labels_are_distinct_series():
+    reg = Registry()
+    reg.counter("hits", method="dbm").inc(3)
+    reg.counter("hits", method="obm").inc(7)
+    assert reg.value("hits", method="dbm") == 3
+    assert reg.value("hits", method="obm") == 7
+    snap = reg.snapshot()["counters"]
+    assert snap["hits{method=dbm}"] == 3
+    assert snap["hits{method=obm}"] == 7
+
+
+@pytest.mark.parametrize("n", [1, 2, 7, 100, 2048])
+def test_histogram_percentiles_match_numpy(n):
+    # while count <= window the windowed percentile must be EXACTLY
+    # numpy's linear-interpolation percentile over everything observed
+    g = np.random.default_rng(n)
+    vals = g.normal(size=n) ** 2
+    h = Histogram(window=2048)
+    for v in vals:
+        h.observe(v)
+    for q in (0, 25, 50, 95, 99, 100):
+        assert h.percentile(q) == pytest.approx(
+            float(np.percentile(vals, q)), rel=1e-12
+        )
+    s = h.snapshot()
+    assert s["count"] == n
+    assert s["sum"] == pytest.approx(vals.sum())
+    assert s["min"] == vals.min() and s["max"] == vals.max()
+
+
+def test_histogram_windowing_drops_oldest():
+    h = Histogram(window=4)
+    for v in [100.0, 100.0, 1.0, 2.0, 3.0, 4.0]:
+        h.observe(v)
+    # window holds the newest 4 observations; lifetime extrema persist
+    assert h.percentile(100) == 4.0
+    assert h.snapshot()["max"] == 100.0
+    assert h.snapshot()["count"] == 6
+    assert h.snapshot()["window"] == 4
+
+
+def test_histogram_empty_is_nan():
+    s = Histogram().snapshot()
+    assert s["count"] == 0
+    assert math.isnan(s["p50"]) and math.isnan(s["min"])
+
+
+# ---------------------------------------------------------------------------
+# spans
+# ---------------------------------------------------------------------------
+
+
+def test_span_nesting_records_paths():
+    reg = Registry()
+    with reg.span("search") as outer:
+        assert outer == "search"
+        with reg.span("plan_lookup") as inner:
+            assert inner == "search/plan_lookup"
+    with reg.span("search"):
+        pass
+    hists = reg.snapshot()["histograms"]
+    assert hists["search"]["count"] == 2
+    assert hists["search/plan_lookup"]["count"] == 1
+    assert hists["search/plan_lookup"]["p50"] >= 0.0
+
+
+def test_span_unwinds_and_records_on_exception():
+    reg = Registry()
+    with pytest.raises(RuntimeError):
+        with reg.span("outer"):
+            with reg.span("boom"):
+                raise RuntimeError("phase failed")
+    hists = reg.snapshot()["histograms"]
+    # both spans recorded despite the raise, and the stack unwound fully
+    assert hists["outer/boom"]["count"] == 1
+    assert hists["outer"]["count"] == 1
+    with reg.span("clean") as path:
+        assert path == "clean"  # not "outer/clean" — stack is empty again
+
+
+def test_span_stack_is_per_thread():
+    reg = Registry()
+    seen = {}
+
+    def worker(name):
+        with reg.span(name):
+            with reg.span("inner") as p:
+                seen[name] = p
+
+    ts = [threading.Thread(target=worker, args=(f"t{i}",)) for i in range(4)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    assert seen == {f"t{i}": f"t{i}/inner" for i in range(4)}
+
+
+def test_disabled_registry_is_inert():
+    reg = Registry(enabled=False)
+    reg.counter("c").inc(10)
+    reg.gauge("g").set(3)
+    reg.histogram("h").observe(1.0)
+    with reg.span("s") as path:
+        assert path is None
+    snap = reg.snapshot()
+    assert snap["enabled"] is False
+    assert snap["counters"] == {} and snap["histograms"] == {}
+    # null objects are shared singletons — no per-call allocation
+    assert reg.counter("a") is reg.counter("b")
+
+
+# ---------------------------------------------------------------------------
+# events (JSONL)
+# ---------------------------------------------------------------------------
+
+
+def test_event_log_roundtrip(tmp_path):
+    p = tmp_path / "events.jsonl"
+    with EventLog(str(p)) as log:
+        log.emit({"event": "custom", "x": 1})
+        reg = Registry(events=log)
+        with reg.span("search", method="vbm"):
+            pass
+    recs = EventLog.read(str(p))
+    assert [r["event"] for r in recs] == ["custom", "span"]
+    assert recs[1]["span"] == "search"
+    assert recs[1]["labels"] == {"method": "vbm"}
+    assert recs[1]["dur_s"] >= 0.0
+    assert all("ts" in r for r in recs)
+    # append mode: reopening adds, never truncates
+    with EventLog(str(p)) as log:
+        log.emit({"event": "later"})
+    assert len(EventLog.read(str(p))) == 3
+
+
+def test_events_path_from_env(monkeypatch):
+    monkeypatch.delenv("REPRO_OBS_EVENTS", raising=False)
+    assert events_path_from_env() is None
+    monkeypatch.setenv("REPRO_OBS_EVENTS", "/tmp/x.jsonl")
+    assert events_path_from_env() == "/tmp/x.jsonl"
+
+
+# ---------------------------------------------------------------------------
+# config validation
+# ---------------------------------------------------------------------------
+
+
+def test_obs_config_validation():
+    from repro.api import ConfigError
+
+    with pytest.raises(ConfigError, match="window"):
+        ObsConfig(window=0)
+    with pytest.raises(ConfigError, match="events_path"):
+        ObsConfig(events_path="")
+
+
+# ---------------------------------------------------------------------------
+# facade integration
+# ---------------------------------------------------------------------------
+
+
+def test_metrics_enabled_search_bitwise_identical(blob_data):
+    q = np.asarray(blob_data[:8])
+    idx_on = OverlapIndex.build(blob_data, _cfg(obs=True))
+    idx_off = OverlapIndex.build(blob_data, _cfg(obs=False))
+    r_on = idx_on.search(q, k=5)
+    r_off = idx_off.search(q, k=5)
+    assert np.array_equal(np.asarray(r_on.dists), np.asarray(r_off.dists))
+    assert np.array_equal(np.asarray(r_on.ids), np.asarray(r_off.ids))
+    assert idx_off.metrics()["enabled"] is False
+    assert idx_off.metrics()["search"]["queries"] == 0
+
+
+def test_facade_metrics_snapshot_shape(blob_data):
+    idx = OverlapIndex.build(blob_data, _cfg())
+    q = np.asarray(blob_data[:8])
+    idx.search(q, k=5)
+    idx.search(q, k=5)
+    g = np.random.default_rng(0)
+    idx.ingest(g.normal(size=(16, blob_data.shape[1])).astype(np.float32))
+    idx.check()
+    m = idx.metrics()
+    assert m["enabled"] is True
+    # per-phase spans under the search root
+    spans = m["search"]["spans"]
+    for path in ("search", "search/plan_lookup", "search/device_execute",
+                 "search/host_transfer"):
+        assert spans[path]["count"] == 2, path
+    assert m["search"]["queries"] == 16
+    assert m["search"]["buckets_visited"] > 0
+    assert m["search"]["bound_distances"] > 0
+    # plan cache counters flow into the same registry AND the stats dict
+    assert m["plan_cache"]["misses"] >= 1
+    assert m["registry"]["counters"]["plan_cache.misses"] \
+        == m["plan_cache"]["misses"]
+    assert m["ingest"]["points"] == 16
+    assert m["maintenance"]["checks"] == 1
+    # single layout: exactly one island, carrying the paper's cost currency
+    assert set(m["islands"]) == {0}
+    isl = m["islands"][0]
+    assert isl["buckets_visited"] == m["search"]["buckets_visited"]
+    assert isl["distances"] == m["search"]["distances"]
+    assert json.dumps(m["registry"])  # whole snapshot is JSON-serializable
+
+
+def test_metrics_events_jsonl(blob_data, tmp_path):
+    p = tmp_path / "spans.jsonl"
+    idx = OverlapIndex.build(blob_data, _cfg(events_path=str(p)))
+    idx.search(np.asarray(blob_data[:4]), k=3)
+    spans = {r["span"] for r in EventLog.read(str(p))}
+    assert "search" in spans and "search/device_execute" in spans
+
+
+# ---------------------------------------------------------------------------
+# plan-cache accounting satellites
+# ---------------------------------------------------------------------------
+
+
+def _fake_key(i: int) -> PlanKey:
+    return PlanKey(k=i + 1, mode="exact", beam=4, kernel=True,
+                   quantize=False, delta_capacity=None, shards=1)
+
+
+def test_plan_cache_eviction_keeps_lifetime_traces():
+    cache = PlanCache(max_plans=2)
+    for i in range(4):  # 4 misses into a 2-slot cache -> 2 evictions
+        plan = cache.plan(_fake_key(i))
+        plan.traces += 1
+    st = cache.stats()
+    assert st["evictions"] == 2
+    assert st["plans"] == 2
+    # lifetime traces survive eviction: 4 plans traced once each
+    assert st["traces"] == 4
+
+
+def test_plan_cache_counters_flow_into_registry():
+    reg = Registry()
+    cache = PlanCache(max_plans=2, registry=reg)
+    cache.plan(_fake_key(0))
+    cache.plan(_fake_key(0))
+    cache.plan(_fake_key(1))
+    cache.plan(_fake_key(2))
+    assert reg.value("plan_cache.hits") == 1
+    assert reg.value("plan_cache.misses") == 3
+    assert reg.value("plan_cache.evictions") == 1
+
+
+def test_stats_to_host_single_device_get(monkeypatch):
+    import jax
+    import jax.numpy as jnp
+
+    import repro.api.plan as plan_mod
+    from repro.core.knn import SearchStats
+
+    stats = SearchStats(
+        buckets_visited=jnp.ones((4,), jnp.int32),
+        distances=jnp.ones((4,), jnp.int32),
+        bound_distances=jnp.ones((4,), jnp.int32),
+        padded_distances=jnp.ones((4,), jnp.int32),
+        comparisons=jnp.ones((4,), jnp.int32),
+        steps=jnp.int32(3),
+    )
+    calls = []
+    real = jax.device_get
+
+    def counting(x):
+        calls.append(x)
+        return real(x)
+
+    monkeypatch.setattr(plan_mod.jax, "device_get", counting)
+    host = stats_to_host(stats)
+    assert len(calls) == 1  # ONE batched fetch, not one per field
+    assert set(host) == {"buckets_visited", "distances", "bound_distances",
+                         "padded_distances", "comparisons", "steps"}
+    assert isinstance(host["steps"], int)
