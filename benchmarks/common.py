@@ -175,11 +175,20 @@ def write_artifact(bench: str, meta: dict | None = None) -> str:
 def history_entries(payload: dict) -> list[dict]:
     """Collapse one BENCH artifact payload into per-(dataset, method)
     history lines: the MEDIAN us_per_query across the run's k sweep (one
-    scalar per series per run keeps the gate's window semantics simple)."""
+    scalar per series per run keeps the gate's window semantics simple).
+
+    Sharded-layout records (``shards > 1``) get a ``/s<N>`` method suffix:
+    tier-2 CI appends its 4-shard timings into the SAME history file as
+    tier-1, and the suffix keeps them a separate gated series instead of
+    corrupting the single-device medians."""
     by: dict[tuple[str, str], list[float]] = {}
     for r in payload.get("records", []):
         if "us_per_query" in r and "dataset" in r and "method" in r:
-            key = (str(r["dataset"]), str(r["method"]))
+            method = str(r["method"])
+            shards = int(r.get("shards", 1))
+            if shards > 1:
+                method = f"{method}/s{shards}"
+            key = (str(r["dataset"]), method)
             by.setdefault(key, []).append(float(r["us_per_query"]))
     t = float(payload.get("meta", {}).get("unix_time", 0.0))
     return [

@@ -126,6 +126,10 @@ class StreamConfig:
     xi_rebuild: float = 0.8  # absolute overlap rate forcing repartition
     drift_margin: float | None = None  # optional rise-over-baseline trigger
     fill_rebuild: float = 0.75  # delta fill fraction forcing a merge-rebuild
+    # measured-waste trigger: rebuild when explain() attribution shows this
+    # share of an index's bucket visits were wasted; None keeps the trigger
+    # off (it only sees data when explain() runs, so it is opt-in)
+    wasted_rebuild: float | None = None
     pivot_method: str = "gh"  # pivot rule for maintenance rebuilds
     c_max: int | None = None  # rebuild bucket capacity; None -> keep forest's
     seed: int = 1
@@ -154,6 +158,13 @@ class StreamConfig:
             0.0 < self.fill_rebuild <= 1.0,
             f"StreamConfig.fill_rebuild={self.fill_rebuild} must lie in "
             "(0, 1] (fraction of delta capacity that forces a merge-rebuild)",
+        )
+        _require(
+            self.wasted_rebuild is None or 0.0 < self.wasted_rebuild <= 1.0,
+            f"StreamConfig.wasted_rebuild={self.wasted_rebuild} must lie in "
+            "(0, 1] or None (share of MEASURED wasted bucket visits — from "
+            "OverlapIndex.explain attribution — that flags an index for "
+            "rebuild; None disables the trigger)",
         )
         _check_pivot(self.pivot_method, owner="StreamConfig")
         _require(
@@ -212,11 +223,20 @@ class ObsConfig:
     bookkeeping only); the toggle exists for overhead-sensitive benches.
     ``events_path`` attaches a JSONL span/event log; ``None`` falls back to
     the ``REPRO_OBS_EVENTS`` environment variable, else events stay off.
+    ``trace_sample`` turns a fraction of ``search()`` calls into traced
+    requests (deterministic systematic sampling, no RNG): their spans carry
+    trace/span/parent ids so ``repro.obs.Trace.reconstruct`` reassembles the
+    per-request tree from the event log.  0.0 (default) keeps tracing off.
+    ``events_max_bytes``/``events_backups`` bound the event log on disk via
+    size-based rotation (``events.jsonl.1``..``.N`` kept, oldest dropped).
     """
 
     enabled: bool = True
     window: int = 2048  # histogram reservoir: exact percentiles up to this
     events_path: str | None = None  # JSONL event log destination
+    trace_sample: float = 0.0  # fraction of searches traced (0 = off, 1 = all)
+    events_max_bytes: int | None = None  # rotate event log past this size
+    events_backups: int = 3  # rotated files kept (0 = truncate in place)
 
     def __post_init__(self) -> None:
         _require(
@@ -228,6 +248,21 @@ class ObsConfig:
             self.events_path is None or len(str(self.events_path)) > 0,
             "ObsConfig.events_path must be a non-empty path or None (None "
             "defers to $REPRO_OBS_EVENTS, else JSONL events stay off)",
+        )
+        _require(
+            0.0 <= self.trace_sample <= 1.0,
+            f"ObsConfig.trace_sample={self.trace_sample} must lie in [0, 1] "
+            "(fraction of search requests that emit linked trace spans)",
+        )
+        _require(
+            self.events_max_bytes is None or self.events_max_bytes >= 1,
+            f"ObsConfig.events_max_bytes={self.events_max_bytes} must be "
+            ">= 1 or None (None never rotates the event log)",
+        )
+        _require(
+            self.events_backups >= 0,
+            f"ObsConfig.events_backups={self.events_backups} must be >= 0 "
+            "(rotated event-log files kept; 0 truncates on rotation)",
         )
 
 

@@ -45,6 +45,7 @@ from repro.core.knn import (
     DeviceForest,
     IslandStats,
     device_forest,
+    knn_search_explain_impl,
     knn_search_impl,
 )
 from repro.kernels import ops as kops
@@ -85,6 +86,21 @@ class SingleDeviceBackend:
                 bound_distances=s.bound_distances[None],
             )
             return d, i, s, isl
+
+        return body
+
+    def explain_body(self, key):
+        def body(forest, q, delta):
+            d, i, s, rows = knn_search_explain_impl(
+                forest, q, k=key.k, mode=key.mode, beam=key.beam,
+                kernel=key.kernel, delta=delta,
+            )
+            isl = IslandStats(
+                buckets_visited=s.buckets_visited[None],
+                distances=s.distances[None],
+                bound_distances=s.bound_distances[None],
+            )
+            return d, i, s, isl, rows
 
         return body
 
@@ -205,6 +221,16 @@ class ShardedBackend:
                 self.mesh, self.axis, forest, q, delta,
                 k=key.k, mode=key.mode, beam=key.beam, kernel=key.kernel,
                 per_island=True,
+            )
+
+        return body
+
+    def explain_body(self, key):
+        def body(forest, q, delta):
+            return self._island.sharded_search(
+                self.mesh, self.axis, forest, q, delta,
+                k=key.k, mode=key.mode, beam=key.beam, kernel=key.kernel,
+                per_island=True, explain=True,
             )
 
         return body

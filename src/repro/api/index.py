@@ -44,8 +44,8 @@ from repro.api.config import (
 from repro.api.executor import make_backend
 from repro.api.plan import PlanCache, PlanKey, SearchResult, stats_to_host
 from repro.core.forest import ForestArrays
-from repro.core.knn import DeviceForest, SearchStats
-from repro.core.overlap import get_overlap_method
+from repro.core.knn import DeviceForest, SearchStats, route_points
+from repro.core.overlap import get_overlap_method, overlap_matrix
 from repro.core.pipeline import (
     BuildReport,
     IndexConfig as _LegacyIndexConfig,
@@ -53,7 +53,16 @@ from repro.core.pipeline import (
     build_index_core,
     default_delta_capacity,
 )
-from repro.obs import EventLog, Registry, events_path_from_env
+from repro.obs import (
+    EventLog,
+    Registry,
+    TraceContext,
+    TraceSampler,
+    current_trace,
+    events_path_from_env,
+    use_trace,
+)
+from repro.obs.attribution import ExplainReport, attribute_visits
 from repro.stream.ingest import (
     DeltaBuffer,
     alloc_delta,
@@ -146,8 +155,17 @@ class OverlapIndex:
         self.obs = Registry(
             enabled=cfg.obs.enabled,
             window=cfg.obs.window,
-            events=None if events_path is None else EventLog(events_path),
+            events=None if events_path is None else EventLog(
+                events_path,
+                max_bytes=cfg.obs.events_max_bytes,
+                backups=cfg.obs.events_backups,
+            ),
         )
+        # per-request tracing: self-sampled searches (cfg.obs.trace_sample)
+        # get their own TraceContext; an ambient context installed by a
+        # caller (ServeEngine) always wins
+        self._tracer = TraceSampler(cfg.obs.trace_sample)
+        self._searches_since_swap = 0  # maintenance.rebuild_age gauge
         self.plans = PlanCache(registry=self.obs)
         self.rebuild_log: list[dict[str, Any]] = rebuild_log or []
         return self
@@ -294,16 +312,41 @@ class OverlapIndex:
                 obs.counter(
                     f"search.island.{name}", island=s_id, method=method
                 ).inc(int(getattr(isl, name)[s_id].sum()))
+            # traced requests additionally get a per-island point event in
+            # their span tree (dropped outside a sampled trace: per-request
+            # annotations must not bloat steady-state logs)
+            obs.emit_event(
+                {
+                    "event": "island",
+                    "island": s_id,
+                    "buckets_visited": int(isl.buckets_visited[s_id].sum()),
+                    "distances": int(isl.distances[s_id].sum()),
+                },
+                traced_only=True,
+            )
 
     def search(
         self, q, *, k: int | None = None, mode: str | None = None,
         beam: int | None = None, kernel: bool | None = None,
+        trace: TraceContext | None = None,
     ) -> SearchResult:
         """kNN over forest + streaming delta.  Defaults come from
         ``cfg.search``; per-call overrides select (or create) the matching
-        cached ``SearchPlan``.  Returns a host-side ``SearchResult``."""
+        cached ``SearchPlan``.  Returns a host-side ``SearchResult``.
+
+        ``trace`` joins this search to a caller-owned request trace; with
+        no explicit context and no ambient one, ``cfg.obs.trace_sample``
+        self-samples (the sampled search becomes its own trace root in the
+        event log).  Tracing never touches the executors — traced and
+        untraced searches return bitwise-identical results.
+        """
         obs = self.obs
-        with obs.span("search"):
+        ctx = trace
+        if ctx is None and obs.enabled and current_trace() is None:
+            ctx = self._tracer.maybe_trace()
+        self._searches_since_swap += 1
+        obs.gauge("maintenance.rebuild_age").set(self._searches_since_swap)
+        with use_trace(ctx), obs.span("search"):
             d, i, s, isl, plan = self._search_planned(
                 q, k=k, mode=mode, beam=beam, kernel=kernel
             )
@@ -316,6 +359,110 @@ class OverlapIndex:
         if d.shape[1] > kk:
             d, i = d[:, :kk], i[:, :kk]
         return SearchResult(dists=d, ids=i, stats=stats, plan=plan)
+
+    def explain(
+        self, q, *, k: int | None = None, mode: str | None = None,
+        beam: int | None = None, kernel: bool | None = None,
+        feed_monitor: bool = True,
+    ) -> ExplainReport:
+        """Search + overlap attribution: which bucket visits CONTRIBUTED a
+        final top-k member, which were WASTED, and which (visited, home)
+        partition pairs the waste charges to (``obs/attribution.py``).
+
+        Runs the normal executor op sequence (a separate cached plan that
+        additionally returns the visited-row evidence — the plain ``search``
+        plan and its results are untouched, and ``report.result`` is
+        bitwise-identical to ``search()``), then a host-side post-pass.
+        Per query, contributing + wasted == ``stats['buckets_visited']``.
+        Aggregates land in ``metrics()['overlap_health']`` and — with
+        ``feed_monitor`` (default) — in the drift monitor's measured-waste
+        accumulators (``StreamConfig.wasted_rebuild`` trigger).
+        """
+        obs = self.obs
+        with obs.span("explain"):
+            with obs.span("plan_lookup"):
+                key = self._plan_key(k, mode, beam, kernel)._replace(
+                    explain=True
+                )
+                plan = self.plans.plan(key, self.backend)
+                plan.calls += 1
+                delta = (
+                    None if self._delta is None else delta_view(self._delta)
+                )
+            qj = jnp.asarray(q, jnp.float32)
+            with obs.span("device_execute"):
+                d, i, s, isl, rows = plan.executor(self.device, qj, delta)
+                # home = the routed index, computed with the DEVICE routing
+                # op (same kernel flag) so tie-breaks match the executor
+                _, home = route_points(
+                    self.device.index_centers, qj, kernel=key.kernel
+                )
+            with obs.span("host_transfer"):
+                d, i = np.asarray(d), np.asarray(i)
+                stats = stats_to_host(s)
+                rows = jax.device_get(rows)
+                home = np.asarray(home)
+            if obs.enabled:
+                self._record_search(stats, isl)
+            kk = min(key.k, self.n_total)
+            if d.shape[1] > kk:
+                d, i = d[:, :kk], i[:, :kk]
+            with obs.span("attribute"):
+                report = self._attribute(rows, i, home)
+        report.result = SearchResult(dists=d, ids=i, stats=stats, plan=plan)
+        if obs.enabled:
+            obs.counter("explain.queries").inc(report.queries)
+            obs.counter("explain.contributing").inc(
+                int(report.contributing.sum())
+            )
+            obs.counter("explain.wasted").inc(int(report.wasted.sum()))
+            jj, ii = np.nonzero(report.wasted_pair)
+            for j_v, i_h in zip(jj.tolist(), ii.tolist()):
+                obs.counter(
+                    "explain.wasted_pair", visited=j_v, home=i_h
+                ).inc(int(report.wasted_pair[j_v, i_h]))
+        if feed_monitor and self.monitor is not None:
+            self.monitor.note_wasted(report.wasted_pair, report.visited_pair)
+        return report
+
+    def _attribute(self, rows, result_ids, home) -> ExplainReport:
+        """Host-side decode of one explain run's ``VisitRows`` (see
+        ``obs.attribution.attribute_visits`` for the semantics)."""
+        forest = self.forest
+        S = self.backend.shards
+        method = self.cfg.stream.monitor_method
+        rates = None
+        if self.monitor is not None:
+            rates = self.monitor.rates_baseline
+        elif not get_overlap_method(method).needs_objects:
+            rates = np.asarray(overlap_matrix(
+                method,
+                jnp.asarray(forest.index_centers, jnp.float32),
+                jnp.asarray(forest.index_radii, jnp.float32),
+            ))
+        delta_ids = delta_count = None
+        if self._delta is not None:
+            meta = pull_delta_meta(self.delta, ids=True)
+            delta_ids, delta_count = meta["ids"], meta["count"]
+        return attribute_visits(
+            order=rows.order,
+            visits=rows.visits,
+            dorder=rows.dorder,
+            dvisits=rows.dvisits,
+            result_ids=result_ids,
+            home=home,
+            n_indexes=forest.n_indexes,
+            bucket_index=forest.bucket_index,
+            bucket_ids=forest.bucket_ids,
+            bucket_mask=forest.bucket_mask,
+            # global row = shard-local row + shard * PADDED per-shard rows
+            main_rows_per_shard=-(-forest.n_buckets // S),
+            delta_rows_per_shard=-(-forest.n_indexes // S),
+            delta_ids=delta_ids,
+            delta_count=delta_count,
+            rates=rates,
+            method=method,
+        )
 
     # -- write path ----------------------------------------------------------
     def _ensure_delta(self) -> None:
@@ -374,6 +521,7 @@ class OverlapIndex:
             xi_rebuild=s.xi_rebuild,
             drift_margin=s.drift_margin,
             fill_rebuild=s.fill_rebuild,
+            wasted_rebuild=s.wasted_rebuild,
             pivot_method=s.pivot_method,
             c_max=s.c_max,
             seed=s.seed,
@@ -460,6 +608,8 @@ class OverlapIndex:
                 self.delta, x=self.x_all if needs_x else None
             )
         self.obs.counter("maintain.checks").inc()
+        for i, f in enumerate(report.fill):
+            self.obs.gauge("maintenance.delta_fill", index=i).set(float(f))
         for reasons in report.reasons.values():
             for why in reasons:
                 self.obs.counter("maintain.triggers", reason=why).inc()
@@ -527,6 +677,8 @@ class OverlapIndex:
         stats["reasons"] = dict(report.reasons) if report is not None else {}
         stats["n_migrated"] = n_migrated
         self.rebuild_log.append(stats)
+        self._searches_since_swap = 0
+        self.obs.gauge("maintenance.rebuild_age").set(0)
         self.obs.counter("maintain.rebuilds").inc(len(triggers))
         self.obs.counter("maintain.migrated").inc(n_migrated)
         self.obs.histogram("maintain.rebuild_wall_s").observe(
@@ -607,8 +759,15 @@ class OverlapIndex:
                        paper's cost currency (buckets_visited / distances /
                        bound_distances) per shard, one island on the single
                        layout;
+          overlap_health  ``explain()`` attribution rollup: contributing vs
+                       wasted visit totals, the wasted fraction, and the
+                       per-(visited, home) wasted-pair counters — the live
+                       evidence behind the paper's overlap argument;
           registry     the raw registry snapshot (every counter/gauge/
                        histogram, including span paths not listed above).
+
+        ``Registry.to_prometheus()`` (or ``python -m repro.obs.export``)
+        renders the registry section in Prometheus text format.
 
         With ``cfg.obs.enabled=False`` the structural sections (plan_cache,
         ingest traces/calls, rebuilds) remain — their counters predate the
@@ -619,6 +778,7 @@ class OverlapIndex:
         counters = obs.counters()
         islands: dict[int, dict[str, int]] = {}
         triggers: dict[str, int] = {}
+        wasted_pairs: dict[str, int] = {}
         for (name, labels), val in counters.items():
             if name.startswith("search.island."):
                 lab = dict(labels)
@@ -627,6 +787,11 @@ class OverlapIndex:
                 ] = val
             elif name == "maintain.triggers":
                 triggers[dict(labels).get("reason", "?")] = val
+            elif name == "explain.wasted_pair":
+                lab = dict(labels)
+                wasted_pairs[f"{lab['visited']}->{lab['home']}"] = val
+        contributing = obs.value("explain.contributing")
+        wasted = obs.value("explain.wasted")
         return {
             "enabled": obs.enabled,
             "search": {
@@ -651,8 +816,26 @@ class OverlapIndex:
                 "rebuilds": len(self.rebuild_log),
                 "indexes_rebuilt": obs.value("maintain.rebuilds"),
                 "migrated": obs.value("maintain.migrated"),
+                # searches served since the last rebuild swap (gauge twin:
+                # maintenance.rebuild_age); delta_fill gauges live in the
+                # registry section under maintenance.delta_fill{index=i}
+                "rebuild_age": self._searches_since_swap,
             },
             "islands": islands,
+            "overlap_health": {
+                "explained_queries": obs.value("explain.queries"),
+                "contributing": contributing,
+                "wasted": wasted,
+                "wasted_fraction": (
+                    wasted / (contributing + wasted)
+                    if (contributing + wasted) else 0.0
+                ),
+                "wasted_pairs": wasted_pairs,
+                "monitor_wasted_share": (
+                    None if self.monitor is None
+                    else self.monitor.wasted_share().tolist()
+                ),
+            },
             "registry": snap,
         }
 

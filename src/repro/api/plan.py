@@ -33,7 +33,13 @@ from typing import Any, Callable, NamedTuple
 import jax
 import numpy as np
 
-from repro.core.knn import DeltaView, DeviceForest, SearchStats, knn_search_impl
+from repro.core.knn import (
+    DeltaView,
+    DeviceForest,
+    SearchStats,
+    knn_search_explain_impl,
+    knn_search_impl,
+)
 
 
 class PlanKey(NamedTuple):
@@ -46,6 +52,11 @@ class PlanKey(NamedTuple):
     quantize: bool
     delta_capacity: int | None  # None: no delta phase compiled in
     shards: int = 1  # device layout (1: single; >1: sharded island)
+    # explain plans additionally return core.knn.VisitRows (the visited-row
+    # evidence obs/attribution.py decodes); a separate plan keeps the
+    # normal search executor's output contract — and its compiled
+    # artifact — untouched
+    explain: bool = False
 
 
 @dataclass
@@ -56,7 +67,10 @@ class SearchPlan:
     ``(dists, ids, SearchStats, IslandStats | None)`` — the fourth element
     carries per-executor-island node-access counters (leading dim = shard
     count; the single layout reports one island) for the telemetry layer,
-    or ``None`` on the legacy backend-less path.  ``traces`` counts actual
+    or ``None`` on the legacy backend-less path.  Explain plans
+    (``key.explain``) append a fifth element, ``core.knn.VisitRows`` — the
+    per-query visited-row evidence the attribution layer decodes.
+    ``traces`` counts actual
     jax traces (option tuple is fixed, so a trace means a new operand
     shape/dtype); ``calls`` counts executions through this plan.
     """
@@ -72,14 +86,25 @@ def _build_plan(key: PlanKey, backend=None) -> SearchPlan:
     if backend is None:
         # no layout backend (legacy/direct use): the single-device executor,
         # normalized to the 4-tuple contract (no island breakdown)
-        def body(forest: DeviceForest, q, delta: DeltaView | None):
-            d, i, s = knn_search_impl(
-                forest, q, k=key.k, mode=key.mode, beam=key.beam,
-                kernel=key.kernel, delta=delta,
-            )
-            return d, i, s, None
+        if key.explain:
+            def body(forest: DeviceForest, q, delta: DeltaView | None):
+                d, i, s, rows = knn_search_explain_impl(
+                    forest, q, k=key.k, mode=key.mode, beam=key.beam,
+                    kernel=key.kernel, delta=delta,
+                )
+                return d, i, s, None, rows
+        else:
+            def body(forest: DeviceForest, q, delta: DeltaView | None):
+                d, i, s = knn_search_impl(
+                    forest, q, k=key.k, mode=key.mode, beam=key.beam,
+                    kernel=key.kernel, delta=delta,
+                )
+                return d, i, s, None
     else:
-        body = backend.search_body(key)
+        body = (
+            backend.explain_body(key) if key.explain
+            else backend.search_body(key)
+        )
 
     def _impl(forest: DeviceForest, q, delta: DeltaView | None):
         # Runs only while jax traces (compiled executions skip python):

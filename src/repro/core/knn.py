@@ -201,6 +201,12 @@ class ScanOut(NamedTuple):
     steps: Array  # () i32
     n_elig: Array  # (Q,) i32 eligible main buckets
     n_elig_d: Array  # (Q,) i32 eligible delta buckets
+    # main-phase-only visit counts (visits - visits_main = delta visits);
+    # the attribution layer decodes visited rows from this + the sorted
+    # visit order.  Appended with a default so positional/keyword
+    # constructions that predate it stay valid; dead on the normal search
+    # path (DCE'd out of compiled executors that don't return it).
+    visits_main: Array | None = None
 
 
 def _sorted_bounds(lb: Array, beam: int) -> tuple[Array, Array, Array]:
@@ -402,6 +408,7 @@ def scan_sorted(
         scan_step, scan_x, scan_ids, scan_scale, bucket_count, cap,
     )
     total_steps = out.t
+    visits_main = out.visits
 
     n_elig_d = jnp.zeros((qn,), jnp.int32)
     if delta is not None:
@@ -429,6 +436,7 @@ def scan_sorted(
         steps=total_steps,
         n_elig=bounds.n_elig,
         n_elig_d=n_elig_d,
+        visits_main=visits_main,
     )
 
 
@@ -551,6 +559,78 @@ def knn_search_impl(
     )
     stats = scan_stats(route_dists, route_cmps, out, kk=kk)
     return jnp.sqrt(out.top_d), out.top_i, stats
+
+
+class VisitRows(NamedTuple):
+    """Per-query visited-row evidence for the attribution layer
+    (``obs/attribution.py``) — one uniform layout across device layouts.
+
+    Exactness of the decode rests on a scan invariant: within one executor
+    (one shard, one phase) the visited buckets are EXACTLY the prefix of
+    the ascending-lower-bound visit order of length ``visits[s, q]`` — the
+    scan walks ``order`` front to back and the termination predicate
+    (``lb_sorted <= kth_best``) can only flip from visit to skip, never
+    back, because ``lb_sorted`` ascends while kth-best is non-increasing.
+    So (order, per-phase visit counts) reconstructs the visited set
+    host-side without re-running anything.
+
+    ``order`` concatenates the S per-shard LOCAL sorted orders along axis 1
+    (block s spans columns ``[s*W, (s+1)*W)`` with ``W = order.shape[1] //
+    S``; entries are SHARD-LOCAL row ids — global row = local + s *
+    rows_per_shard).  The single layout is the S=1 special case where
+    local == global.  ``dorder``/``dvisits`` are the delta phase's twin
+    (``None`` when no delta phase was compiled in).
+    """
+
+    order: Array  # (Q, S*W) per-shard-local sorted visit orders, col-stacked
+    visits: Array  # (S, Q) i32 MAIN-phase visited counts per shard
+    dorder: Array | None  # (Q, S*Wd) delta visit orders
+    dvisits: Array | None  # (S, Q) i32 delta-phase visited counts per shard
+
+
+def knn_search_explain_impl(
+    forest: DeviceForest,
+    q: Array,
+    *,
+    k: int,
+    mode: str = "forest",
+    beam: int = 1,
+    kernel: bool = True,
+    delta: DeltaView | None = None,
+) -> tuple[Array, Array, SearchStats, VisitRows]:
+    """``knn_search_impl`` + the visited-row evidence (``VisitRows``).
+
+    Runs the IDENTICAL op sequence as the normal executor — same routing,
+    same bounds, same scan bodies with the same operands — and additionally
+    returns the sorted visit orders and per-phase visit counts that were
+    already computed along the way.  Results are therefore bitwise-identical
+    to ``knn_search_impl`` (gated in-suite); the extra outputs are arrays
+    the normal path computes and discards, not extra device work.
+    """
+    n_idx = forest.index_centers.shape[0]
+    nb, cap, _ = forest.bucket_x.shape
+    n_cap = nb * cap
+    if delta is not None:
+        n_cap += n_idx * delta.x.shape[1]
+    kk = min(k, n_cap)
+
+    sel, route_dists, route_cmps = route_select(forest, q, mode=mode, kernel=kernel)
+    bounds = bucket_bounds(forest, q, sel, beam=beam, kernel=kernel)
+    dbounds = None
+    if delta is not None:
+        dbounds = delta_bounds(delta, q, sel, beam=beam, kernel=kernel)
+    out = scan_sorted(
+        forest, q, bounds, kk=kk, beam=beam, kernel=kernel,
+        delta=delta, dbounds=dbounds,
+    )
+    stats = scan_stats(route_dists, route_cmps, out, kk=kk)
+    rows = VisitRows(
+        order=bounds.order,
+        visits=out.visits_main[None],
+        dorder=None if dbounds is None else dbounds.order,
+        dvisits=None if delta is None else (out.visits - out.visits_main)[None],
+    )
+    return jnp.sqrt(out.top_d), out.top_i, stats, rows
 
 
 # Jitted executor shared by the legacy entry points below.  The facade does

@@ -100,12 +100,17 @@ def sharded_search(
     beam: int = 1,
     kernel: bool = True,
     per_island: bool = False,
+    explain: bool = False,
 ) -> tuple[Array, ...]:
     """Sharded twin of ``core.knn.knn_search_impl`` — same signature shape,
     same return triple, bitwise-identical results.  ``per_island=True``
     appends a fourth element, ``core.knn.IslandStats`` with one row per
     shard, exposing which island paid which node accesses (the telemetry
     layer's load-balance view; the summed ``SearchStats`` is unchanged).
+    ``explain=True`` (implies ``per_island``) appends a fifth,
+    ``core.knn.VisitRows``: the col-stacked per-shard sorted visit orders
+    (shard-LOCAL row ids — the bounds island's order tables verbatim) plus
+    (S, Q) main/delta visited counts, the attribution layer's evidence.
 
     TWO ``shard_map`` regions, not one: the bounds island (routing +
     eligibility + pivot lower bounds + the SORTED visit order) and the scan
@@ -184,8 +189,11 @@ def sharded_search(
         # counters leave as explicit (1, Q) shard rows (stacked to (S, Q)
         # by the out_spec) instead of psum-replicated totals: the caller
         # sums them for SearchStats AND keeps the per-island breakdown
-        return (top_d, top_i, out.visits[None], out.ndist[None],
+        outs = (top_d, top_i, out.visits[None], out.ndist[None],
                 out.npad[None], out.steps[None])
+        if explain:
+            outs += (out.visits_main[None],)
+        return outs
 
     fspec = forest_specs(forest, axis)
     dspec = None if delta is None else delta_view_specs(axis)
@@ -201,12 +209,16 @@ def sharded_search(
         out_specs=bounds_out,
         check_vma=False,
     )
+    scan_out = (P(), P(), row, row, row, P(axis))
+    if explain:
+        per_island = True
+        scan_out += (row,)
     scan_fn = dctx.shard_map(
         scan_island,
         mesh=mesh,
         in_specs=(fspec, P(), dspec, col, col,
                   col if have_delta else None, col if have_delta else None),
-        out_specs=(P(), P(), row, row, row, P(axis)),
+        out_specs=scan_out,
         check_vma=False,
     )
 
@@ -216,9 +228,8 @@ def sharded_search(
     n_elig_d_s = jnp.zeros((S, qn), jnp.int32)
     if have_delta:
         dorder, dlbs, n_elig_d_s = bout[5:]
-    top_d, top_i, visits_s, ndist_s, npad_s, steps_s = scan_fn(
-        forest, q, delta, order, lbs, dorder, dlbs
-    )
+    sout = scan_fn(forest, q, delta, order, lbs, dorder, dlbs)
+    top_d, top_i, visits_s, ndist_s, npad_s, steps_s = sout[:6]
     merged = cknn.ScanOut(
         top_d=top_d,
         top_i=top_i,
@@ -239,7 +250,16 @@ def sharded_search(
         distances=ndist_s,
         bound_distances=route_d + n_elig + n_elig_d_s,
     )
-    return jnp.sqrt(top_d), top_i, stats, island
+    if not explain:
+        return jnp.sqrt(top_d), top_i, stats, island
+    visits_main_s = sout[6]
+    rows = cknn.VisitRows(
+        order=order,
+        visits=visits_main_s,
+        dorder=dorder,
+        dvisits=None if not have_delta else visits_s - visits_main_s,
+    )
+    return jnp.sqrt(top_d), top_i, stats, island, rows
 
 
 def sharded_ingest(

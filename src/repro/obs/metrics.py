@@ -35,6 +35,8 @@ import time
 from contextlib import contextmanager
 from typing import Any, Iterator
 
+from repro.obs import trace as trace_mod
+
 __all__ = ["Counter", "Gauge", "Histogram", "Registry"]
 
 MetricKey = tuple[str, tuple[tuple[str, Any], ...]]
@@ -252,6 +254,15 @@ class Registry:
         stack = self._stack()
         stack.append(name)
         path = "/".join(stack)
+        # trace linkage: when an ambient sampled TraceContext is installed
+        # (obs/trace.use_trace) AND events are attached, this span joins the
+        # request's tree — parentage comes from the context's own stack, so
+        # linkage survives across owner objects (engine registry -> index
+        # registry) as long as the context flows
+        ctx = trace_mod.current_trace() if self.events is not None else None
+        sid = parent = None
+        if ctx is not None:
+            sid, parent = ctx.push()
         t0 = time.perf_counter()
         try:
             yield path
@@ -259,11 +270,80 @@ class Registry:
             dur = time.perf_counter() - t0
             stack.pop()
             self.histogram(path, **labels).observe(dur)
+            if ctx is not None:
+                ctx.pop()
             if self.events is not None:
                 rec = {"event": "span", "span": path, "dur_s": dur}
                 if labels:
                     rec["labels"] = dict(labels)
+                if ctx is not None:
+                    rec["trace_id"] = ctx.trace_id
+                    rec["span_id"] = sid
+                    rec["parent_id"] = parent
                 self.events.emit(rec)
+
+    def record_span(self, name: str, dur_s: float, **labels) -> None:
+        """Record a span whose duration was measured externally (e.g. queue
+        wait = admission time minus submit time): observes the histogram
+        under ``name`` and — with events attached — emits a span event with
+        the same trace linkage a ``span()`` exit would carry."""
+        if not self.enabled:
+            return
+        self.histogram(name, **labels).observe(float(dur_s))
+        if self.events is None:
+            return
+        rec = {"event": "span", "span": name, "dur_s": float(dur_s)}
+        if labels:
+            rec["labels"] = dict(labels)
+        ctx = trace_mod.current_trace()
+        if ctx is not None:
+            sid, parent = ctx.link()
+            rec["trace_id"] = ctx.trace_id
+            rec["span_id"] = sid
+            rec["parent_id"] = parent
+        self.events.emit(rec)
+
+    def emit_trace_root(self, ctx, name: str, dur_s: float, **labels) -> None:
+        """Emit a trace's ROOT span record (parent ``None``) with an
+        externally-measured duration — the owner (``ServeEngine``) calls
+        this once per sampled request at completion, closing the tree every
+        nested span already parented to ``ctx.root_id``."""
+        if not self.enabled:
+            return
+        self.histogram(name, **labels).observe(float(dur_s))
+        if self.events is None or ctx is None or not ctx.sampled:
+            return
+        rec = {
+            "event": "span",
+            "span": name,
+            "dur_s": float(dur_s),
+            "trace_id": ctx.trace_id,
+            "span_id": ctx.root_id,
+            "parent_id": None,
+        }
+        if labels:
+            rec["labels"] = dict(labels)
+        self.events.emit(rec)
+
+    def emit_event(self, event: dict[str, Any], *, traced_only: bool = False) -> None:
+        """Emit a structured point event, stamped with trace linkage when a
+        sampled ambient trace is active (parented at the current span,
+        nothing pushed).  ``traced_only=True`` drops the event entirely
+        outside a sampled trace — for per-request annotations (island
+        counters, plan identity) that would otherwise bloat steady-state
+        logs."""
+        if self.events is None or not self.enabled:
+            return
+        ctx = trace_mod.current_trace()
+        if ctx is None:
+            if not traced_only:
+                self.events.emit(event)
+            return
+        sid, parent = ctx.link()
+        self.events.emit(
+            {**event, "trace_id": ctx.trace_id, "span_id": sid,
+             "parent_id": parent}
+        )
 
     # -- reads ---------------------------------------------------------------
     def counters(self) -> dict[MetricKey, int]:
@@ -290,3 +370,12 @@ class Registry:
                 _fmt(k): h.snapshot() for k, h in self._hists.items()
             },
         }
+
+    def to_prometheus(self) -> str:
+        """The whole registry in Prometheus text exposition format —
+        counters, gauges, and histograms-as-summaries (quantile labels +
+        ``_sum``/``_count``).  See ``obs/export.py`` for the renderer and
+        the ``python -m repro.obs.export`` CLI around it."""
+        from repro.obs.export import render_prometheus  # lazy: export is CLI-adjacent
+
+        return render_prometheus(self.snapshot())

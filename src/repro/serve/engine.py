@@ -33,7 +33,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.model import Model
-from repro.obs import Registry
+from repro.obs import Registry, TraceContext, TraceSampler, use_trace
 from repro.serve.retrieval import Datastore, ForestDatastore, ingest_keys
 
 PyTree = Any
@@ -47,7 +47,12 @@ class Request:
     out_tokens: list[int] = field(default_factory=list)
     done: bool = False
     latency_s: float = 0.0
+    # tracing: assigned at submit() by the engine's sampler (or preset by
+    # the caller); sampled requests emit a linked span tree — queue wait,
+    # prefill, and a "serve.request" root — into the registry's event log
+    trace: TraceContext | None = None
     _t0: float = 0.0  # perf_counter at slot admission (latency accounting)
+    _t_submit: float = 0.0  # perf_counter at submit (queue-wait accounting)
 
 
 @dataclass
@@ -78,6 +83,7 @@ class ServeEngine:
         datastore: Datastore | None = None,
         greedy: bool = True,
         registry: Registry | None = None,
+        trace_sample: float = 0.0,
     ):
         self.model = model
         self.params = params
@@ -97,6 +103,11 @@ class ServeEngine:
         # scatter of per-request perf_counter fields as the ENGINE's view
         # (requests keep their latency_s for per-request callers)
         self.obs = registry if registry is not None else Registry()
+        # per-request tracing: ``trace_sample`` of submitted decode requests
+        # get a TraceContext (deterministic systematic sampling); their
+        # queue-wait/prefill spans and completion root land in the
+        # registry's event log for Trace.reconstruct
+        self._tracer = TraceSampler(trace_sample)
 
     def metrics(self) -> dict[str, Any]:
         """One snapshot of the engine's registry: ``serve.*`` latency
@@ -119,6 +130,9 @@ class ServeEngine:
         if isinstance(req, IngestRequest):
             self.ingest_queue.append(req)
         else:
+            req._t_submit = time.perf_counter()
+            if req.trace is None:
+                req.trace = self._tracer.maybe_trace()
             self.queue.append(req)
 
     def _drain_ingest(self) -> list[IngestRequest]:
@@ -158,10 +172,16 @@ class ServeEngine:
             req = self.queue.pop(0)
             req._t0 = time.perf_counter()
             prompt = jnp.asarray(req.prompt[None, :], jnp.int32)
-            with self.obs.span("serve.prefill"):
-                logits, cache1 = self.model.prefill(
-                    self.params, {"tokens": prompt}, max_len=self.max_len
+            with use_trace(req.trace):
+                # queue wait was measured outside any span — record it into
+                # the request's tree with the externally-measured duration
+                self.obs.record_span(
+                    "serve.queue_wait", req._t0 - req._t_submit
                 )
+                with self.obs.span("serve.prefill"):
+                    logits, cache1 = self.model.prefill(
+                        self.params, {"tokens": prompt}, max_len=self.max_len
+                    )
             # merge the single-row cache into this slot's lane
             self.cache = jax.tree.map(
                 lambda full, one: jax.lax.dynamic_update_slice_in_dim(
@@ -223,8 +243,12 @@ class ServeEngine:
                         or self.slot_pos[s] >= self.max_len - 1:
                     req.done = True
                     req.latency_s = time.perf_counter() - req._t0
-                    self.obs.histogram("serve.request_latency_s").observe(
-                        req.latency_s
+                    # observes serve.request_latency_s AND — for a sampled
+                    # request with an event log attached — emits the trace's
+                    # root span, closing the tree the queue-wait/prefill
+                    # spans already parented to
+                    self.obs.emit_trace_root(
+                        req.trace, "serve.request_latency_s", req.latency_s
                     )
                     finished.append(req)
                     self.slot_req[s] = None

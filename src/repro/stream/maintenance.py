@@ -22,6 +22,12 @@ Trigger taxonomy (``DriftReport.reasons``):
             bound (one over-full tail bucket per selected index).
   overflow  capacity-rejected appends recorded — standing trigger, the
             rejected points are waiting to be re-ingested.
+  wasted    MEASURED waste: ``OverlapIndex.explain`` attribution reported
+            >= wasted_rebuild of the visits into this index's buckets as
+            wasted (no member survived into any final top-k).  Unlike the
+            geometry triggers above this one is evidence from executed
+            queries, fed in via ``note_wasted``; off unless wasted_rebuild
+            is set AND explain() runs.
 
 Rebuilds never drop queries: the new forest is built OFF to the side on the
 host while the old (device forest, delta) pair keeps serving; the swap
@@ -64,6 +70,7 @@ class MaintenanceConfig:
     xi_rebuild: float = 0.8  # absolute overlap rate forcing repartition
     drift_margin: float | None = None  # optional rise-over-baseline trigger
     fill_rebuild: float = 0.75  # delta fill fraction forcing a merge-rebuild
+    wasted_rebuild: float | None = None  # measured wasted-visit share trigger
     pivot_method: str = "gh"
     c_max: int | None = None  # default: keep the forest's bucket capacity
     seed: int = 1
@@ -158,6 +165,30 @@ class OverlapMonitor:
         self.rates_baseline = _rates(
             cfg.method, forest.index_centers, forest.index_radii, x, assign
         )
+        n_idx = forest.n_indexes
+        # measured-waste accumulators (explain() attribution evidence);
+        # recreated-with-the-monitor after a rebuild, so they reset exactly
+        # when the geometry they judged stops existing
+        self.wasted_visits = np.zeros(n_idx, np.int64)  # wasted, by visited
+        self.attr_visits = np.zeros(n_idx, np.int64)  # all, by visited
+
+    # minimum attributed visits into an index before the measured-waste
+    # trigger may fire — a handful of explain()ed queries must not force a
+    # rebuild off noise
+    WASTED_MIN_VISITS = 16
+
+    def note_wasted(
+        self, wasted_pair: np.ndarray, visited_pair: np.ndarray
+    ) -> None:
+        """Fold one ``ExplainReport``'s (visited, home) pair matrices into
+        the lifetime accumulators (rows: visited index)."""
+        self.wasted_visits += np.asarray(wasted_pair, np.int64).sum(axis=1)
+        self.attr_visits += np.asarray(visited_pair, np.int64).sum(axis=1)
+
+    def wasted_share(self) -> np.ndarray:
+        """(I,) fraction of attributed visits into each index that were
+        wasted (0 where nothing was attributed yet)."""
+        return self.wasted_visits / np.maximum(self.attr_visits, 1)
 
     def check(
         self, delta: DeltaBuffer, *, x: np.ndarray | None = None
@@ -206,6 +237,12 @@ class OverlapMonitor:
                 why.append("fill")
             if host["dropped"][i] > 0:
                 why.append("overflow")
+            if (
+                cfg.wasted_rebuild is not None
+                and self.attr_visits[i] >= self.WASTED_MIN_VISITS
+                and self.wasted_share()[i] >= cfg.wasted_rebuild
+            ):
+                why.append("wasted")
             if why:
                 report.triggers.append(i)
                 report.reasons[i] = why
@@ -296,6 +333,7 @@ class StreamingForest:
                 xi_rebuild=mc.xi_rebuild,
                 drift_margin=mc.drift_margin,
                 fill_rebuild=mc.fill_rebuild,
+                wasted_rebuild=mc.wasted_rebuild,
                 pivot_method=mc.pivot_method,
                 c_max=mc.c_max,
                 seed=mc.seed,

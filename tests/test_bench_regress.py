@@ -55,6 +55,20 @@ def test_history_entries_median_over_k_sweep():
     assert e["n_points"] == 2 and e["t"] == 7.0
 
 
+def test_history_entries_namespace_sharded_runs():
+    # a tier-2 sharded run must land in its own series — same dataset and
+    # method, but suffixed so it can't corrupt the single-device medians
+    p = _payload(50.0)
+    for r in p["records"]:
+        r["shards"] = 4
+    (e,) = history_entries(p)
+    assert e["method"] == "vbm/s4"
+    mixed = _payload(50.0)
+    mixed["records"] += [dict(r, shards=4) for r in mixed["records"][:2]]
+    entries = history_entries(mixed)
+    assert sorted(e["method"] for e in entries) == ["vbm", "vbm/s4"]
+
+
 def test_history_jsonl_roundtrip(tmp_path):
     p = str(tmp_path / "h.jsonl")
     assert load_history(p) == []  # missing file is empty history

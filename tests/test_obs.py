@@ -196,6 +196,18 @@ def test_obs_config_validation():
         ObsConfig(window=0)
     with pytest.raises(ConfigError, match="events_path"):
         ObsConfig(events_path="")
+    with pytest.raises(ConfigError, match="trace_sample"):
+        ObsConfig(trace_sample=1.5)
+    with pytest.raises(ConfigError, match="trace_sample"):
+        ObsConfig(trace_sample=-0.1)
+    with pytest.raises(ConfigError, match="events_max_bytes"):
+        ObsConfig(events_max_bytes=0)
+    with pytest.raises(ConfigError, match="events_backups"):
+        ObsConfig(events_backups=-1)
+    with pytest.raises(ConfigError, match="wasted_rebuild"):
+        StreamConfig(wasted_rebuild=0.0)
+    with pytest.raises(ConfigError, match="wasted_rebuild"):
+        StreamConfig(wasted_rebuild=1.5)
 
 
 # ---------------------------------------------------------------------------
@@ -203,7 +215,7 @@ def test_obs_config_validation():
 # ---------------------------------------------------------------------------
 
 
-def test_metrics_enabled_search_bitwise_identical(blob_data):
+def test_metrics_enabled_search_bitwise_identical(blob_data, tmp_path):
     q = np.asarray(blob_data[:8])
     idx_on = OverlapIndex.build(blob_data, _cfg(obs=True))
     idx_off = OverlapIndex.build(blob_data, _cfg(obs=False))
@@ -213,6 +225,21 @@ def test_metrics_enabled_search_bitwise_identical(blob_data):
     assert np.array_equal(np.asarray(r_on.ids), np.asarray(r_off.ids))
     assert idx_off.metrics()["enabled"] is False
     assert idx_off.metrics()["search"]["queries"] == 0
+    # sampled tracing is host-side bookkeeping too: a fully traced search
+    # (every request gets a span tree in the event log) returns the same
+    # bits as the metrics-off search
+    idx_tr = OverlapIndex.build(blob_data, _cfg(
+        obs=True, trace_sample=1.0,
+        events_path=str(tmp_path / "tr.jsonl"),
+    ))
+    r_tr = idx_tr.search(q, k=5)
+    assert np.array_equal(np.asarray(r_tr.dists), np.asarray(r_off.dists))
+    assert np.array_equal(np.asarray(r_tr.ids), np.asarray(r_off.ids))
+    # explain() runs the identical op sequence plus host-side attribution:
+    # its embedded result must match plain search() bitwise as well
+    rep = idx_tr.explain(q, k=5)
+    assert np.array_equal(np.asarray(rep.result.dists), np.asarray(r_off.dists))
+    assert np.array_equal(np.asarray(rep.result.ids), np.asarray(r_off.ids))
 
 
 def test_facade_metrics_snapshot_shape(blob_data):

@@ -26,6 +26,7 @@ from repro.api import (
     Config,
     IndexConfig,
     LayoutConfig,
+    ObsConfig,
     OverlapIndex,
     SearchConfig,
     StreamConfig,
@@ -308,3 +309,93 @@ def test_layout_default_shards_uses_all_devices():
     backend = make_backend(LayoutConfig(kind="sharded"))
     assert backend.kind == "sharded"
     assert backend.shards == jax.device_count()
+
+
+# ---------------------------------------------------------------------------
+# observability under sharding: metrics gates + per-island attribution
+# ---------------------------------------------------------------------------
+
+def _obs_cfg(index_kw: dict, *, enabled=True, layout=None, **obs_kw) -> Config:
+    return Config(
+        index=IndexConfig(**index_kw),
+        search=SearchConfig(),
+        stream=StreamConfig(capacity=64),
+        layout=layout or SHARDED4,
+        obs=ObsConfig(enabled=enabled, **obs_kw),
+    )
+
+
+def test_sharded_metrics_on_off_bitwise(datasets):
+    # the no-effect guarantee under the sharded layout: metrics are host-side
+    # bookkeeping, so flipping the registry must not move a single bit of
+    # the island executors' output — forest phase and delta phase alike
+    x, kw = datasets["blobs"]
+    on = OverlapIndex.build(x, _obs_cfg(kw))
+    off = OverlapIndex.build(x, _obs_cfg(kw, enabled=False))
+    batch = _queries(x, 40, seed=9)
+    np.testing.assert_array_equal(on.ingest(batch), off.ingest(batch))
+    q = _queries(x)
+    for mode in ("forest", "all"):
+        r_on = on.search(q, k=7, mode=mode)
+        r_off = off.search(q, k=7, mode=mode)
+        np.testing.assert_array_equal(r_on.dists, r_off.dists, err_msg=mode)
+        np.testing.assert_array_equal(r_on.ids, r_off.ids, err_msg=mode)
+    assert off.metrics()["enabled"] is False
+    assert on.metrics()["search"]["queries"] == 2 * len(q)
+
+
+def test_sharded_explain_and_tracing_bitwise(datasets, tmp_path):
+    from repro.obs import Trace
+
+    x, kw = datasets["blobs"]
+    p = str(tmp_path / "trace.jsonl")
+    plain = OverlapIndex.build(x, _obs_cfg(kw))
+    traced = OverlapIndex.build(
+        x, _obs_cfg(kw, trace_sample=1.0, events_path=p)
+    )
+    batch = _queries(x, 40, seed=9)
+    plain.ingest(batch)
+    traced.ingest(batch)
+    q = _queries(x)
+    ref = plain.search(q, k=9)
+    r_tr = traced.search(q, k=9)
+    np.testing.assert_array_equal(r_tr.dists, ref.dists)
+    np.testing.assert_array_equal(r_tr.ids, ref.ids)
+    # explain() decodes the sharded VisitRows (shard-local sorted orders +
+    # per-phase counts): bitwise results AND exact visit conservation
+    rep = traced.explain(q, k=9)
+    np.testing.assert_array_equal(rep.result.dists, ref.dists)
+    np.testing.assert_array_equal(rep.result.ids, ref.ids)
+    np.testing.assert_array_equal(
+        rep.contributing + rep.wasted, rep.result.stats["buckets_visited"]
+    )
+    # the traced search's tree carries one island point event per shard
+    tids = Trace.trace_ids(p)
+    assert tids
+    t = Trace.reconstruct(p, tids[0])
+    islands = [r for r in t.records if r.get("event") == "island"]
+    assert sorted(r["island"] for r in islands) == [0, 1, 2, 3]
+
+
+def test_island_counters_sum_to_fleet_totals(datasets):
+    x, kw = datasets["blobs"]
+    ix = OverlapIndex.build(x, _obs_cfg(kw))
+    q = _queries(x)
+    ix.search(q, k=5, mode="forest")
+    ix.ingest(_queries(x, 40, seed=9))
+    # forest mode again: delta-phase work still lands in the island rows,
+    # and forest-mode routing keeps the bound_distances relation exact below
+    # (mode="all" skips routing entirely)
+    ix.search(q, k=9, mode="forest")
+    m = ix.metrics()
+    assert set(m["islands"]) == {0, 1, 2, 3}
+    for name in ("buckets_visited", "distances"):
+        fleet = m["search"][name]
+        assert fleet > 0
+        assert sum(isl[name] for isl in m["islands"].values()) == fleet, name
+    # bound_distances: every shard routes the replicated queries itself, so
+    # the island rows over-count routing by (S - 1) x queries x centers
+    # relative to the fleet total (which counts routing once per query)
+    fleet = m["search"]["bound_distances"]
+    summed = sum(isl["bound_distances"] for isl in m["islands"].values())
+    assert summed == fleet + (4 - 1) * m["search"]["queries"] * ix.n_indexes
