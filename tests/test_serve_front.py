@@ -1,0 +1,225 @@
+"""Serving-front traffic semantics: deadlines, admission control, load
+shedding, counter conservation, and query/ingest fairness.
+
+Companion to tests/test_retrieval_serving.py (which pins the decode/
+retrieval correctness of the same engine); this module pins the TRAFFIC
+behavior the production front added: every request reaches exactly one
+terminal state (done XOR shed), the shed counters conserve against
+submissions, and a saturating write stream cannot starve reads.
+"""
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.data.synthetic import embedding_datastore
+from repro.models.model import Model
+from repro.serve.engine import (
+    SHED_EXPIRED_FLIGHT,
+    SHED_EXPIRED_QUEUE,
+    SHED_REJECTED,
+    IngestRequest,
+    Request,
+    ServeEngine,
+)
+
+
+@pytest.fixture(scope="module")
+def lm():
+    cfg = get_smoke_config("smollm-135m")
+    model = Model(cfg)
+    params = model.init(jax.random.key(0))
+    return cfg, model, params
+
+
+def _req(cfg, rid, *, tokens=4, deadline=None, seed=0):
+    g = np.random.default_rng(seed + rid)
+    return Request(
+        rid=rid, prompt=g.integers(0, cfg.vocab_size, 5).astype(np.int32),
+        max_new_tokens=tokens, deadline_s=deadline,
+    )
+
+
+def _shed_total(reg):
+    return sum(
+        reg.value("serve.shed", reason=r)
+        for r in (SHED_REJECTED, SHED_EXPIRED_QUEUE, SHED_EXPIRED_FLIGHT)
+    )
+
+
+def _assert_conserved(engine):
+    """submitted == completed + shed + in-flight, at any step boundary."""
+    reg = engine.obs
+    in_flight = len(engine.queue) + sum(
+        1 for r in engine.slot_req if r is not None
+    )
+    assert reg.value("serve.submitted") == (
+        reg.value("serve.completed") + _shed_total(reg) + in_flight
+    )
+
+
+def test_reject_on_submit_accounting(lm):
+    """Admission control sheds at submit() when the projected queue wait
+    already exceeds the deadline; the request never enters the queue and
+    the books still balance."""
+    cfg, model, params = lm
+    # a deliberately absurd service-time hint: ANY queued work projects a
+    # wait of >= hint/num_slots seconds, so the second submit must bounce
+    engine = ServeEngine(model, params, num_slots=1, max_len=24,
+                         step_time_hint_s=10.0)
+    a = _req(cfg, 0, tokens=3)  # no deadline: never rejected
+    b = _req(cfg, 1, tokens=3, deadline=0.5)
+    assert engine.submit(a) is True
+    assert engine.submit(b) is False  # projected 30s >> 0.5s budget
+    assert b.shed and b.shed_reason == SHED_REJECTED and b.state == "shed"
+    assert not b.done and b.out_tokens == []
+    assert engine.obs.value("serve.submitted") == 2
+    assert engine.obs.value("serve.shed", reason=SHED_REJECTED) == 1
+    _assert_conserved(engine)
+
+    finished = engine.run()
+    # the rejected request is NOT re-surfaced by run(); the submitter holds it
+    assert finished == [a] and a.done and len(a.out_tokens) >= 3
+    assert engine.obs.value("serve.completed") == 1
+    _assert_conserved(engine)
+    # projected-wait gauge was published for the deadline submit
+    assert engine.metrics()["gauges"]["serve.projected_wait_s"] > 0.5
+
+
+def test_deadline_expires_while_queued(lm):
+    """A queued request whose budget lapses is shed before it ever reaches
+    prefill — zero tokens were generated for it."""
+    cfg, model, params = lm
+    engine = ServeEngine(model, params, num_slots=1, max_len=24)
+    a = _req(cfg, 0, tokens=4)
+    b = _req(cfg, 1, tokens=4, deadline=1e-3)  # cold engine admits it
+    assert engine.submit(a) and engine.submit(b)
+    time.sleep(5e-3)  # budget lapses while b still waits behind a
+    finished = engine.run()
+    assert set(map(id, finished)) == {id(a), id(b)}
+    assert a.done and not a.shed
+    assert b.shed and b.shed_reason == SHED_EXPIRED_QUEUE
+    assert b.out_tokens == []  # never prefillled, never decoded
+    assert b.latency_s >= 1e-3
+    assert engine.obs.value("serve.shed", reason=SHED_EXPIRED_QUEUE) == 1
+    _assert_conserved(engine)
+
+
+def test_deadline_expires_mid_flight(lm):
+    """A decoding request whose budget lapses is evicted from its slot:
+    partial output is kept, the slot frees for other work, and the shed is
+    counted under its own reason."""
+    cfg, model, params = lm
+    engine = ServeEngine(model, params, num_slots=1, max_len=128)
+    engine.submit(_req(cfg, 99, tokens=2))  # warm: compile prefill + decode
+    engine.run()
+    r = _req(cfg, 0, tokens=10_000, deadline=0.05)  # cannot finish in budget
+    assert engine.submit(r) is True  # idle engine: projected wait 0
+    finished = engine.run()
+    assert finished == [r]
+    assert r.shed and r.shed_reason == SHED_EXPIRED_FLIGHT
+    assert not r.done
+    assert len(r.out_tokens) >= 1  # prefill's first token at minimum
+    assert len(r.out_tokens) < 10_000
+    assert all(s is None for s in engine.slot_req)  # slot actually freed
+    assert engine.obs.value("serve.shed", reason=SHED_EXPIRED_FLIGHT) == 1
+    _assert_conserved(engine)
+
+
+def test_conservation_holds_mid_run(lm):
+    """submitted == completed + shed + in_flight at every step boundary,
+    not just at drain — exercised via the public step() API."""
+    cfg, model, params = lm
+    engine = ServeEngine(model, params, num_slots=1, max_len=24)
+    reqs = [_req(cfg, i, tokens=3) for i in range(3)]
+    for r in reqs:
+        engine.submit(r)
+    _assert_conserved(engine)  # 3 submitted, 3 queued
+    seen = []
+    while engine.busy:
+        seen.extend(engine.step())
+        _assert_conserved(engine)
+    assert engine.obs.value("serve.completed") == 3
+    assert _shed_total(engine.obs) == 0
+    assert [r.rid for r in seen] == [0, 1, 2]  # FCFS through one slot
+
+
+def test_shed_requests_stay_out_of_latency_percentiles(lm):
+    """serve.request_latency_s sees COMPLETED requests only; shed waits go
+    to serve.shed_wait_s — percentiles of admitted traffic must not be
+    polluted by rejections."""
+    cfg, model, params = lm
+    engine = ServeEngine(model, params, num_slots=1, max_len=24,
+                         step_time_hint_s=10.0)
+    engine.submit(_req(cfg, 0, tokens=3))
+    engine.submit(_req(cfg, 1, tokens=3, deadline=0.1))  # rejected
+    engine.run()
+    hists = engine.metrics()["histograms"]
+    assert hists["serve.request_latency_s"]["count"] == 1
+    assert hists["serve.shed_wait_s"]["count"] == 1
+
+
+def test_ingest_drain_is_bounded_and_fair(lm):
+    """A saturating ingest backlog must not starve queued queries: at most
+    max_ingest_per_step batches apply per scheduler step, the deferral is
+    observable, and the decode request completes BEFORE the write backlog
+    finishes draining."""
+    cfg, model, params = lm
+    from repro.serve.retrieval import build_forest_datastore
+
+    keys, values = embedding_datastore(256, cfg.d_model, seed=5)
+    ds = build_forest_datastore(keys, values % cfg.vocab_size,
+                                stream_capacity=128)
+    engine = ServeEngine(model, params, num_slots=1, max_len=24,
+                         datastore=ds, max_ingest_per_step=1)
+    new_keys = (-keys[:24] + 40.0).astype(np.float32)
+    for i in range(12):
+        engine.submit(IngestRequest(
+            rid=100 + i, keys=new_keys[i * 2:(i + 1) * 2],
+            values=np.full(2, 9, np.int32)))
+    q = _req(cfg, 0, tokens=4)
+    engine.submit(q)
+    finished = engine.run()
+    ingests = [r for r in finished if isinstance(r, IngestRequest)]
+    assert len(ingests) == 12 and all(r.done for r in ingests)
+    assert q.done
+    # fairness: the query retired before the last ingest ack (the unbounded
+    # drain would have applied all 12 writes before the first decode step)
+    assert finished.index(q) < finished.index(ingests[-1])
+    assert engine.obs.value("serve.ingest_deferred") >= 3
+    assert sum(r.accepted for r in ingests) == 24
+    _assert_conserved(engine)
+
+
+def test_max_ingest_per_step_validated(lm):
+    cfg, model, params = lm
+    with pytest.raises(ValueError, match="max_ingest_per_step"):
+        ServeEngine(model, params, max_ingest_per_step=0)
+
+
+def test_no_deadline_requests_never_shed(lm):
+    """deadline_s=None keeps the pre-deadline contract: always admitted,
+    never expired, regardless of how slow the engine thinks it is."""
+    cfg, model, params = lm
+    engine = ServeEngine(model, params, num_slots=1, max_len=24,
+                         step_time_hint_s=100.0)
+    reqs = [_req(cfg, i, tokens=2) for i in range(3)]
+    assert all(engine.submit(r) for r in reqs)
+    finished = engine.run()
+    assert len(finished) == 3 and all(r.done and not r.shed for r in reqs)
+    assert _shed_total(engine.obs) == 0
+
+
+def test_step_time_estimate_updates_from_measurement(lm):
+    """The admission model is measured, not configured: after real decode
+    steps the estimate reflects the hardware, so a stale hint cannot shed
+    forever."""
+    cfg, model, params = lm
+    engine = ServeEngine(model, params, num_slots=1, max_len=24,
+                         step_time_hint_s=50.0)
+    assert engine.step_time_s() == 50.0
+    engine.submit(_req(cfg, 0, tokens=6))
+    engine.run()
+    assert engine.step_time_s() < 50.0  # medians over measured steps now

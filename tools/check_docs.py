@@ -1,0 +1,159 @@
+"""Docs gate: README cross-references must resolve and the quickstart must
+run.
+
+Two checks, both hard CI failures (.github/workflows/ci.yml "Docs check"):
+
+1. **Reference check** — across every README.md in the repo:
+   * relative markdown links ``[text](path)`` must point at an existing
+     file/directory (http(s)/mailto/#anchor links are skipped);
+   * backtick-quoted file references (`` `src/repro/obs/README.md` ``,
+     `` `kernels/README.md` ``, `` `tests/test_obs.py::test_x` ``) must
+     resolve against the README's own directory or one of the repo's
+     conventional roots (repo root, src/repro, examples, benchmarks,
+     tools, tests).  The READMEs cross-reference each other heavily
+     (distributed <-> obs <-> serve); this is what keeps a rename from
+     silently stranding them.
+
+2. **Snippet check** — the FIRST ```python code block of the top-level
+   README (the quickstart) is executed in a temp directory with a clean
+   namespace.  The quickstart is the repo's front door; this is what keeps
+   it from rotting into pseudocode (it already had an undefined-variable
+   bug once — caught by exactly this check).
+
+Usage: ``PYTHONPATH=src python tools/check_docs.py [--no-run] [--root DIR]``
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import re
+import sys
+import tempfile
+
+# [text](target) — target captured up to the closing paren (no nesting in
+# our docs); external schemes and pure anchors are filtered later
+_MD_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+# `path/to/file.md` or `tests/test_x.py::test_name` inside backticks
+_TICK_REF = re.compile(r"`([A-Za-z0-9_./-]+\.(?:md|py))(?:::[^`]*)?`")
+_FENCE = re.compile(r"^```(\w*)\s*$")
+
+# backtick references resolve against the README's directory first, then
+# these repo-root-relative bases (matching how the docs name things:
+# "kernels/README.md" from the top level means src/repro/kernels/README.md,
+# "quickstart.py" means examples/quickstart.py)
+_BASES = ("", "src", "src/repro", "examples", "benchmarks", "tools", "tests")
+
+
+def find_readmes(root: str) -> list[str]:
+    out = []
+    for dirpath, dirnames, filenames in os.walk(root):
+        dirnames[:] = [
+            d for d in dirnames
+            if not d.startswith(".") and d not in ("__pycache__", "node_modules")
+        ]
+        if "README.md" in filenames:
+            out.append(os.path.join(dirpath, "README.md"))
+    return sorted(out)
+
+
+def _strip_code(text: str) -> str:
+    """Drop fenced code blocks: code is checked by execution (snippet
+    check) and by the test suite, not by reference-resolution heuristics."""
+    out, in_fence = [], False
+    for line in text.splitlines():
+        if _FENCE.match(line):
+            in_fence = not in_fence
+            continue
+        if not in_fence:
+            out.append(line)
+    return "\n".join(out)
+
+
+def check_refs(readme: str, root: str) -> list[str]:
+    """All unresolvable references in one README, as error strings."""
+    with open(readme) as f:
+        text = _strip_code(f.read())
+    here = os.path.dirname(readme)
+    rel = os.path.relpath(readme, root)
+    errors = []
+
+    for target in _MD_LINK.findall(text):
+        if target.startswith(("http://", "https://", "mailto:", "#")):
+            continue
+        path = target.split("#", 1)[0]
+        if not path:
+            continue
+        if not os.path.exists(os.path.normpath(os.path.join(here, path))):
+            errors.append(f"{rel}: broken link ({target})")
+
+    for ref in set(_TICK_REF.findall(text)):
+        candidates = [os.path.join(here, ref)] + [
+            os.path.join(root, base, ref) for base in _BASES
+        ]
+        if not any(os.path.exists(os.path.normpath(c)) for c in candidates):
+            errors.append(f"{rel}: dangling file reference (`{ref}`)")
+    return errors
+
+
+def first_python_block(readme: str) -> str | None:
+    """The first fenced ```python block's source, or None."""
+    lines, block, in_block = [], None, False
+    with open(readme) as f:
+        for line in f:
+            m = _FENCE.match(line)
+            if m and not in_block and m.group(1) == "python":
+                in_block, lines = True, []
+            elif m and in_block:
+                block = "".join(lines)
+                break
+            elif in_block:
+                lines.append(line)
+    return block
+
+
+def run_snippet(src: str, label: str) -> list[str]:
+    """Execute a README snippet in a temp cwd; errors become doc failures."""
+    cwd = os.getcwd()
+    with tempfile.TemporaryDirectory(prefix="repro_docs_") as tmp:
+        os.chdir(tmp)
+        try:
+            exec(compile(src, label, "exec"), {"__name__": "__docs__"})
+        except Exception as e:  # noqa: BLE001 — any failure fails the gate
+            return [f"{label}: quickstart snippet failed: {type(e).__name__}: {e}"]
+        finally:
+            os.chdir(cwd)
+    return []
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--root", default=os.path.dirname(
+        os.path.dirname(os.path.abspath(__file__))))
+    ap.add_argument("--no-run", action="store_true",
+                    help="reference check only (skip snippet execution)")
+    a = ap.parse_args(argv)
+
+    readmes = find_readmes(a.root)
+    errors = []
+    for r in readmes:
+        errors.extend(check_refs(r, a.root))
+    print(f"# checked references in {len(readmes)} READMEs")
+
+    if not a.no_run:
+        top = os.path.join(a.root, "README.md")
+        src = first_python_block(top)
+        if src is None:
+            errors.append("README.md: no ```python quickstart block found")
+        else:
+            print(f"# running README quickstart ({len(src.splitlines())} lines)")
+            errors.extend(run_snippet(src, "README.md quickstart"))
+
+    for e in errors:
+        print(f"FAIL: {e}", file=sys.stderr)
+    if not errors:
+        print(f"docs check OK ({len(readmes)} READMEs)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
