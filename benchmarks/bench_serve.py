@@ -109,6 +109,7 @@ def _point(engine, cfg, *, n, qps, tokens, deadline, seed, events):
     sweep records."""
     from repro.obs import EventLog, Registry
     from repro.serve.engine import (
+        SHED_EARLY,
         SHED_EXPIRED_FLIGHT,
         SHED_EXPIRED_QUEUE,
         SHED_REJECTED,
@@ -125,7 +126,8 @@ def _point(engine, cfg, *, n, qps, tokens, deadline, seed, events):
     lat = snap["histograms"].get("serve.request_latency_s", {})
     shed = {
         r: reg.value("serve.shed", reason=r)
-        for r in (SHED_REJECTED, SHED_EXPIRED_QUEUE, SHED_EXPIRED_FLIGHT)
+        for r in (SHED_REJECTED, SHED_EXPIRED_QUEUE, SHED_EXPIRED_FLIGHT,
+                  SHED_EARLY)
     }
     submitted = reg.value("serve.submitted")
     completed = reg.value("serve.completed")
@@ -237,6 +239,7 @@ def run(smoke: bool = False, events: str | None = None) -> int:
                 shed_rejected=m["shed"]["rejected"],
                 shed_expired_queue=m["shed"]["expired_queue"],
                 shed_expired_flight=m["shed"]["expired_flight"],
+                shed_early=m["shed"]["early"],
                 shed_rate=m["shed_rate"],
                 p50_s=m["p50_s"], p95_s=m["p95_s"], p99_s=m["p99_s"],
                 queue_wait_p99_s=m["queue_wait_p99_s"],

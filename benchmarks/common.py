@@ -66,31 +66,35 @@ def index_config(ds: BenchDataset, method: str) -> IndexConfig:
     )
 
 
-def layout_config(shards: int = 1) -> LayoutConfig:
+def layout_config(shards: int = 1, route: bool = False) -> LayoutConfig:
     """Device layout for a bench run: single below 2 shards, else the
-    sharded island layout (the caller is responsible for forcing a host
-    mesh via XLA_FLAGS before jax initializes)."""
+    sharded island layout — or, with ``route=True``, the routed layout
+    (routing tier over the same islands).  The caller is responsible for
+    forcing a host mesh via XLA_FLAGS before jax initializes."""
     if shards <= 1:
         return LayoutConfig()
+    if route:
+        return LayoutConfig(kind="routed", shards=shards)
     return LayoutConfig(kind="sharded", shards=shards)
 
 
 def facade_config(
-    ds: BenchDataset, method: str, *, shards: int = 1, obs: bool = True,
-    **search,
+    ds: BenchDataset, method: str, *, shards: int = 1, route: bool = False,
+    obs: bool = True, **search,
 ) -> Config:
     """Full Config tree for OverlapIndex.build over a bench dataset.
     ``obs=False`` disables the telemetry registry (overhead comparisons)."""
     return Config(
         index=index_config(ds, method),
         search=SearchConfig(**search),
-        layout=layout_config(shards),
+        layout=layout_config(shards, route),
         obs=ObsConfig(enabled=obs),
     )
 
 
 def baseline_config(
-    ds: BenchDataset, *, shards: int = 1, obs: bool = True, **search
+    ds: BenchDataset, *, shards: int = 1, route: bool = False,
+    obs: bool = True, **search,
 ) -> Config:
     """BCCF baseline config: documented 'kmeans' pivot semantics, explicit
     so the honored-pivot warning never fires in benchmarks."""
@@ -99,7 +103,7 @@ def baseline_config(
     return Config(
         index=dataclasses.replace(index_config(ds, "vbm"), pivot_method="kmeans"),
         search=SearchConfig(**search),
-        layout=layout_config(shards),
+        layout=layout_config(shards, route),
         obs=ObsConfig(enabled=obs),
     )
 
@@ -180,14 +184,18 @@ def history_entries(payload: dict) -> list[dict]:
     Sharded-layout records (``shards > 1``) get a ``/s<N>`` method suffix:
     tier-2 CI appends its 4-shard timings into the SAME history file as
     tier-1, and the suffix keeps them a separate gated series instead of
-    corrupting the single-device medians."""
+    corrupting the single-device medians.  Routed-layout records (the
+    routing tier over the same islands; ``routed`` truthy on the record)
+    get ``/r<N>`` instead — their timings include the routing prefix and
+    must gate as their own series too."""
     by: dict[tuple[str, str], list[float]] = {}
     for r in payload.get("records", []):
         if "us_per_query" in r and "dataset" in r and "method" in r:
             method = str(r["method"])
             shards = int(r.get("shards", 1))
             if shards > 1:
-                method = f"{method}/s{shards}"
+                tag = "r" if r.get("routed") else "s"
+                method = f"{method}/{tag}{shards}"
             key = (str(r["dataset"]), method)
             by.setdefault(key, []).append(float(r["us_per_query"]))
     t = float(payload.get("meta", {}).get("unix_time", 0.0))

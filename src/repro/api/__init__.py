@@ -16,6 +16,7 @@ from repro.api.config import (
     IndexConfig,
     LayoutConfig,
     ObsConfig,
+    RoutingConfig,
     SearchConfig,
     StreamConfig,
     as_index_config,
@@ -34,6 +35,7 @@ from repro.deprecation import RepoDeprecationWarning
 
 __all__ = [
     "Config", "ConfigError", "IndexConfig", "LayoutConfig", "ObsConfig",
+    "RoutingConfig",
     "SearchConfig", "StreamConfig", "as_index_config", "make_backend",
     "OverlapIndex",
     "PlanCache", "PlanKey", "SearchPlan", "SearchResult",

@@ -21,7 +21,8 @@ from repro.core.pipeline import IndexConfig as _LegacyIndexConfig
 
 PIVOT_METHODS = ("gh", "kmeans")
 SEARCH_MODES = ("forest", "all")
-DEVICE_LAYOUTS = ("single", "sharded")
+DEVICE_LAYOUTS = ("single", "sharded", "routed")
+FANOUT_MODES = ("auto", "targeted", "all")
 
 
 class ConfigError(ValueError):
@@ -175,6 +176,36 @@ class StreamConfig:
 
 
 @dataclass(frozen=True)
+class RoutingConfig:
+    """Routing-tier knobs for ``LayoutConfig(kind='routed')`` (the DIMS-style
+    multi-host layer, distributed/router/).
+
+    ``fanout`` picks the dispatch mode: ``'auto'`` lets the cost model
+    choose per query batch between targeted routing (heterogeneous — only
+    hosts whose regions can contain an answer) and full fan-out
+    (homogeneous); ``'targeted'``/``'all'`` force one side, which exists for
+    tests and for fleets whose operators already know their workload shape.
+    ``overlap_method`` names the registered VBM/DBM/OBM heuristic used to
+    estimate overlap rates between host-level regions in the routing table.
+    """
+
+    fanout: str = "auto"  # auto | targeted | all
+    overlap_method: str = "dbm"  # host-region overlap rates in the table
+
+    def __post_init__(self) -> None:
+        _require(
+            self.fanout in FANOUT_MODES,
+            f"RoutingConfig.fanout={self.fanout!r} is unknown; choose 'auto' "
+            "(cost model picks per batch), 'targeted' (always prune hosts) "
+            "or 'all' (always fan out — DIMS homogeneous search)",
+        )
+        _check_method(
+            self.overlap_method, owner="RoutingConfig",
+            field_name="overlap_method",
+        )
+
+
+@dataclass(frozen=True)
 class LayoutConfig:
     """Device layout of the executor layer (repro.api.executor).
 
@@ -183,35 +214,48 @@ class LayoutConfig:
     splits the bucket rows and delta buffers over the first ``shards``
     local devices along the ``axis`` mesh axis and runs searches/ingests
     inside one ``shard_map`` island (distributed/knn_island.py) — results
-    stay bitwise-identical to the single layout.
+    stay bitwise-identical to the single layout.  ``kind='routed'`` is the
+    sharded layout plus the multi-host routing tier (distributed/router/):
+    a replicated per-host routing table prunes the hosts each query batch
+    must touch, and a cost model picks targeted routing vs full fan-out —
+    still bitwise-identical to both other layouts.
     """
 
-    kind: str = "single"  # single | sharded
-    shards: int | None = None  # sharded: device count; None -> all local
+    kind: str = "single"  # single | sharded | routed
+    shards: int | None = None  # sharded/routed: device count; None -> all
     axis: str = "model"  # mesh axis name the rows shard over
+    routing: RoutingConfig = field(default_factory=RoutingConfig)
 
     def __post_init__(self) -> None:
         _require(
             self.kind in DEVICE_LAYOUTS,
             f"LayoutConfig.kind={self.kind!r} is unknown; choose 'single' "
-            "(one device, the default) or 'sharded' (bucket rows + delta "
-            "buffers split over the model axis)",
+            "(one device, the default), 'sharded' (bucket rows + delta "
+            "buffers split over the model axis) or 'routed' (sharded plus "
+            "the per-host routing table + cost-model dispatch)",
         )
         _require(
             self.shards is None or self.shards >= 1,
             f"LayoutConfig.shards={self.shards} must be >= 1 or None "
-            "(None uses every local device under kind='sharded')",
+            "(None uses every local device under kind='sharded'/'routed')",
         )
         _require(
-            self.kind == "sharded" or self.shards is None,
+            self.kind in ("sharded", "routed") or self.shards is None,
             f"LayoutConfig.shards={self.shards} only applies to "
-            "kind='sharded' (the single layout always uses one device)",
+            "kind='sharded'/'routed' (the single layout always uses one "
+            "device)",
         )
         _require(
             isinstance(self.axis, str) and len(self.axis) > 0,
             f"LayoutConfig.axis={self.axis!r} must be a non-empty mesh "
             "axis name (the serving mesh calls it 'model')",
         )
+        if not isinstance(self.routing, RoutingConfig):
+            raise ConfigError(
+                "LayoutConfig.routing must be a RoutingConfig (got "
+                f"{type(self.routing).__name__}); construct it as "
+                "LayoutConfig(kind='routed', routing=RoutingConfig(...))"
+            )
 
 
 @dataclass(frozen=True)

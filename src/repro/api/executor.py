@@ -107,6 +107,14 @@ class SingleDeviceBackend:
     def ingest_body(self):
         return ingest_impl
 
+    def search_operands(self, device_forest):
+        """First operand the plan executor is called with.  The routed
+        backend overrides this to bundle the routing table alongside the
+        forest — as a traced OPERAND, so a rebuild-swapped table reaches
+        already-compiled plans without retracing (a closure capture would
+        bake the stale table into the executable)."""
+        return device_forest
+
     def barrier(self, *trees) -> None:
         # single device: the facade's swap assignment is already atomic
         return None
@@ -243,11 +251,80 @@ class ShardedBackend:
 
         return body
 
+    def search_operands(self, device_forest):
+        return device_forest
+
     def barrier(self, *trees) -> None:
         """Block until every shard of the given trees is materialized —
         called right before a maintenance rebuild's hot swap, so a
         concurrent query can never observe a half-placed forest/delta."""
         jax.block_until_ready(trees)
+
+
+class RoutedBackend(ShardedBackend):
+    """The sharded layout plus the routing tier (distributed/router/):
+    a replicated :class:`~repro.distributed.router.RoutingTable` rebuilt at
+    every forest upload (build, load — including the host-count clamp —
+    and maintenance rebuild swaps all funnel through ``upload_forest``),
+    and executor bodies that run ``routed_search`` instead of the bare
+    island.  Search bodies append ``RouterStats`` to the island tuple."""
+
+    kind = "routed"
+
+    def __init__(self, shards: int, axis: str = "model", *, routing=None):
+        from repro.api.config import RoutingConfig
+        from repro.distributed import router
+
+        super().__init__(shards, axis)
+        self.routing = routing if routing is not None else RoutingConfig()
+        self._router = router
+        self.table = None  # replicated device RoutingTable
+
+    def upload_forest(self, forest: ForestArrays, *, quantize: bool) -> DeviceForest:
+        dev = super().upload_forest(forest, quantize=quantize)
+        self.refresh_table(forest, quantize=quantize)
+        return dev
+
+    def refresh_table(self, forest: ForestArrays, *, quantize: bool = False) -> None:
+        """(Re)build the routing table from the LOGICAL forest and replicate
+        it across the mesh.  Must run on every swap that can move bucket
+        ownership — a stale table must never silently mis-route.  An int8
+        layout (``quantize``) gets covers around the dequantized members,
+        matching the distances its scans actually compute."""
+        tab = self._router.build_routing_table(
+            forest, self.shards, method=self.routing.overlap_method,
+            quantize=quantize,
+        )
+        self.table = jax.device_put(tab, NamedSharding(self.mesh, P()))
+
+    def search_operands(self, device_forest):
+        return (device_forest, self.table)
+
+    def search_body(self, key):
+        fanout = key.fanout or self.routing.fanout
+
+        def body(operands, q, delta):
+            forest, table = operands
+            return self._router.routed_search(
+                self.mesh, self.axis, forest, q, delta, table,
+                k=key.k, mode=key.mode, beam=key.beam, kernel=key.kernel,
+                fanout=fanout, per_island=True,
+            )
+
+        return body
+
+    def explain_body(self, key):
+        fanout = key.fanout or self.routing.fanout
+
+        def body(operands, q, delta):
+            forest, table = operands
+            return self._router.routed_search(
+                self.mesh, self.axis, forest, q, delta, table,
+                k=key.k, mode=key.mode, beam=key.beam, kernel=key.kernel,
+                fanout=fanout, per_island=True, explain=True,
+            )
+
+        return body
 
 
 def make_backend(layout: LayoutConfig, *, clamp: bool = False):
@@ -277,5 +354,9 @@ def make_backend(layout: LayoutConfig, *, clamp: bool = False):
         )
         shards = avail
     if shards == 1:
+        # one effective host: routing degenerates (every query has exactly
+        # one eligible host), so both kinds collapse to the single layout
         return SingleDeviceBackend()
+    if layout.kind == "routed":
+        return RoutedBackend(shards, layout.axis, routing=layout.routing)
     return ShardedBackend(shards, layout.axis)

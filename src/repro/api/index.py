@@ -255,6 +255,12 @@ class OverlapIndex:
             quantize=sc.quantize,
             delta_capacity=None if self._delta is None else self.capacity,
             shards=self.backend.shards,
+            # routed layout: the dispatch policy is a static compile knob —
+            # None elsewhere keeps single/sharded plan keys unchanged
+            fanout=(
+                self.cfg.layout.routing.fanout
+                if self.backend.kind == "routed" else None
+            ),
         )
         if key.k < 1:
             raise ConfigError(f"search k={key.k} must be >= 1 neighbors")
@@ -273,7 +279,7 @@ class OverlapIndex:
         """Raw device triple (dists, ids, SearchStats) through the plan
         cache — the serving/benchmark path that stays on device."""
         with self.obs.span("search"):
-            d, i, s, _, _ = self._search_planned(
+            d, i, s, *_ = self._search_planned(
                 q, k=k, mode=mode, beam=beam, kernel=kernel
             )
         return d, i, s
@@ -290,19 +296,52 @@ class OverlapIndex:
             plan.calls += 1
             delta = None if self._delta is None else delta_view(self._delta)
         with self.obs.span("device_execute"):
-            d, i, s, isl = plan.executor(
-                self.device, jnp.asarray(q, jnp.float32), delta
+            outs = plan.executor(
+                self.backend.search_operands(self.device),
+                jnp.asarray(q, jnp.float32), delta,
             )
-        return d, i, s, isl, plan
+        # routed executors append RouterStats; everything else is 4 long
+        d, i, s, isl = outs[:4]
+        router = outs[4] if len(outs) > 4 else None
+        return d, i, s, isl, router, plan
 
-    def _record_search(self, stats: dict[str, Any], isl) -> None:
+    def _record_search(self, stats: dict[str, Any], isl, router=None) -> None:
         """Fold one search's host-side stats into the registry: fleet
         node-access counters plus the per-island breakdown the sharded
-        executor reports (load balance across shards)."""
+        executor reports (load balance across shards) — and, on the routed
+        layout, the routing tier's dispatch telemetry."""
         obs = self.obs
         obs.counter("search.queries").inc(len(stats["buckets_visited"]))
         for name in ("buckets_visited", "distances", "bound_distances"):
             obs.counter(f"search.{name}").inc(int(stats[name].sum()))
+        if router is not None:
+            r = jax.device_get(router)
+            mode = "targeted" if bool(r.targeted) else "all"
+            obs.counter("router.queries").inc(len(r.eligible_hosts))
+            obs.counter("router.eligible_hosts").inc(
+                int(r.eligible_hosts.sum())
+            )
+            obs.counter("router.pruned_hosts").inc(int(r.pruned_hosts.sum()))
+            obs.counter("router.fanout", mode=mode).inc(
+                len(r.eligible_hosts)
+            )
+            obs.counter("router.est_bytes", mode="targeted").inc(
+                int(r.wire_targeted)
+            )
+            obs.counter("router.est_bytes", mode="all").inc(
+                int(r.wire_fanall)
+            )
+            obs.emit_event(
+                {
+                    "event": "router",
+                    "fanout": mode,
+                    "eligible_hosts": r.eligible_hosts.tolist(),
+                    "pruned_hosts": int(r.pruned_hosts.sum()),
+                    "est_bytes_targeted": float(r.wire_targeted),
+                    "est_bytes_fanall": float(r.wire_fanall),
+                },
+                traced_only=True,
+            )
         if isl is None:
             return
         isl = jax.device_get(isl)
@@ -347,14 +386,14 @@ class OverlapIndex:
         self._searches_since_swap += 1
         obs.gauge("maintenance.rebuild_age").set(self._searches_since_swap)
         with use_trace(ctx), obs.span("search"):
-            d, i, s, isl, plan = self._search_planned(
+            d, i, s, isl, router, plan = self._search_planned(
                 q, k=k, mode=mode, beam=beam, kernel=kernel
             )
             with obs.span("host_transfer"):
                 d, i = np.asarray(d), np.asarray(i)
                 stats = stats_to_host(s)
             if obs.enabled:
-                self._record_search(stats, isl)
+                self._record_search(stats, isl, router)
         kk = min(plan.key.k, self.n_total)  # Def. 4: |X| <= k -> whole set
         if d.shape[1] > kk:
             d, i = d[:, :kk], i[:, :kk]
@@ -391,7 +430,11 @@ class OverlapIndex:
                 )
             qj = jnp.asarray(q, jnp.float32)
             with obs.span("device_execute"):
-                d, i, s, isl, rows = plan.executor(self.device, qj, delta)
+                outs = plan.executor(
+                    self.backend.search_operands(self.device), qj, delta
+                )
+                d, i, s, isl, rows = outs[:5]
+                router = outs[5] if len(outs) > 5 else None
                 # home = the routed index, computed with the DEVICE routing
                 # op (same kernel flag) so tie-breaks match the executor
                 _, home = route_points(
@@ -403,7 +446,7 @@ class OverlapIndex:
                 rows = jax.device_get(rows)
                 home = np.asarray(home)
             if obs.enabled:
-                self._record_search(stats, isl)
+                self._record_search(stats, isl, router)
             kk = min(key.k, self.n_total)
             if d.shape[1] > kk:
                 d, i = d[:, :kk], i[:, :kk]
@@ -759,6 +802,13 @@ class OverlapIndex:
                        paper's cost currency (buckets_visited / distances /
                        bound_distances) per shard, one island on the single
                        layout;
+          router       routing-tier dispatch telemetry (routed layout):
+                       queries routed, eligible/pruned-host totals, per-mode
+                       fanout counts (``router.fanout{mode=...}``),
+                       estimated cross-host all-gather bytes for both
+                       dispatch modes, and a host-side summary of the live
+                       routing table (host member counts, worst inter-host
+                       overlap rate);
           overlap_health  ``explain()`` attribution rollup: contributing vs
                        wasted visit totals, the wasted fraction, and the
                        per-(visited, home) wasted-pair counters — the live
@@ -792,6 +842,17 @@ class OverlapIndex:
                 wasted_pairs[f"{lab['visited']}->{lab['home']}"] = val
         contributing = obs.value("explain.contributing")
         wasted = obs.value("explain.wasted")
+        table = getattr(self.backend, "table", None)
+        router_table = None
+        if table is not None:
+            t = jax.device_get(table)
+            router_table = {
+                "hosts": int(t.host_counts.shape[0]),
+                "host_counts": t.host_counts.tolist(),
+                "max_rate": (
+                    float(t.host_rates.max()) if t.host_rates.size else 0.0
+                ),
+            }
         return {
             "enabled": obs.enabled,
             "search": {
@@ -822,6 +883,20 @@ class OverlapIndex:
                 "rebuild_age": self._searches_since_swap,
             },
             "islands": islands,
+            "router": {
+                "queries": obs.value("router.queries"),
+                "eligible_hosts": obs.value("router.eligible_hosts"),
+                "pruned_hosts": obs.value("router.pruned_hosts"),
+                "fanout": {
+                    m: obs.value("router.fanout", mode=m)
+                    for m in ("targeted", "all")
+                },
+                "est_bytes": {
+                    m: obs.value("router.est_bytes", mode=m)
+                    for m in ("targeted", "all")
+                },
+                "table": router_table,
+            },
             "overlap_health": {
                 "explained_queries": obs.value("explain.queries"),
                 "contributing": contributing,

@@ -22,6 +22,7 @@ from repro.api.config import (
     Config,
     IndexConfig,
     LayoutConfig,
+    RoutingConfig,
     SearchConfig,
     StreamConfig,
 )
@@ -160,12 +161,16 @@ def load_state(path) -> dict[str, Any]:
                 f"build reads up to v{FORMAT_VERSION} — upgrade repro"
             )
         cfg_d = json.loads(str(z["config_json"]))
+        # asdict flattened the nested RoutingConfig to a plain dict —
+        # rebuild the dataclass (absent in pre-routing snapshots -> defaults)
+        layout_d = dict(cfg_d.get("layout", {}))
+        layout_d["routing"] = RoutingConfig(**layout_d.get("routing", {}))
         cfg = Config(
             index=IndexConfig(**cfg_d["index"]),
             search=SearchConfig(**cfg_d["search"]),
             stream=StreamConfig(**cfg_d["stream"]),
             # absent in pre-layout (v1 era) snapshots -> single-device
-            layout=LayoutConfig(**cfg_d.get("layout", {})),
+            layout=LayoutConfig(**layout_d),
         )
 
         forest_arrays = {n: z[f"forest_{n}"] for n in _FOREST_ARRAYS}

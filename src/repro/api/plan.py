@@ -57,6 +57,10 @@ class PlanKey(NamedTuple):
     # normal search executor's output contract — and its compiled
     # artifact — untouched
     explain: bool = False
+    # routed layout only: the dispatch policy compiled into the executor
+    # ('auto' | 'targeted' | 'all'); None on single/sharded layouts, so
+    # their keys — and cached plans — are unchanged
+    fanout: str | None = None
 
 
 @dataclass
@@ -69,7 +73,13 @@ class SearchPlan:
     count; the single layout reports one island) for the telemetry layer,
     or ``None`` on the legacy backend-less path.  Explain plans
     (``key.explain``) append a fifth element, ``core.knn.VisitRows`` — the
-    per-query visited-row evidence the attribution layer decodes.
+    per-query visited-row evidence the attribution layer decodes.  Routed
+    executors (``key.fanout`` set) append one further trailing element,
+    ``distributed.router.RouterStats`` — the facade unpacks by position
+    from the front and treats any extra trailing element as router
+    telemetry.  The first operand is whatever the backend's
+    ``search_operands`` wraps (the bare forest, or (forest, table) on the
+    routed layout).
     ``traces`` counts actual
     jax traces (option tuple is fixed, so a trace means a new operand
     shape/dtype); ``calls`` counts executions through this plan.

@@ -6,6 +6,12 @@ to border-point tie-breaking, which we resolve by nearest-core assignment):
 
 1. *Core mask*: |N_eps(o)| >= MinPts, computed with blocked pairwise-distance
    tiles (never materializing the full N x N matrix).
+
+Each phase streams its (block, N) distance tiles through the fused eps-graph
+kernels in ``kernels/pairwise_l2.py`` (dispatch via ``kernels/ops``:
+compiled Pallas on TPU, interpret under ``REPRO_FORCE_PALLAS=1``, pure-jnp
+reference otherwise); ``kernel=False`` forces the in-place jnp formulation,
+which tests/test_dbscan.py keeps as the oracle for the kernelized path.
 2. *Core connectivity*: connected components of the eps-graph restricted to
    core points, via min-label propagation + pointer jumping inside a single
    jitted ``lax.while_loop`` (converges in O(graph diameter / 2^jumps) sweeps).
@@ -27,6 +33,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.metric import _pairwise_sq_l2_jnp
+from repro.kernels import ops
 
 Array = jax.Array
 
@@ -49,8 +56,13 @@ def _pad_rows(x: Array, block: int) -> tuple[Array, int]:
     return x, n + pad
 
 
-@functools.partial(jax.jit, static_argnames=("block", "min_pts", "max_iter"))
-def _dbscan_device(x: Array, eps: float, *, min_pts: int, block: int, max_iter: int):
+@functools.partial(
+    jax.jit, static_argnames=("block", "min_pts", "max_iter", "kernel")
+)
+def _dbscan_device(
+    x: Array, eps: float, *, min_pts: int, block: int, max_iter: int,
+    kernel: bool = True,
+):
     n = x.shape[0]
     xp, n_pad = _pad_rows(x, block)
     nb = n_pad // block
@@ -62,6 +74,8 @@ def _dbscan_device(x: Array, eps: float, *, min_pts: int, block: int, max_iter: 
 
     # -- 1. core mask ------------------------------------------------------
     def _count_body(_, ib):
+        if kernel:
+            return None, ops.eps_count(_block_rows(ib), x, eps_sq)
         d = _pairwise_sq_l2_jnp(_block_rows(ib), x)
         return None, jnp.sum(d <= eps_sq, axis=1)
 
@@ -74,6 +88,10 @@ def _dbscan_device(x: Array, eps: float, *, min_pts: int, block: int, max_iter: 
 
     def _sweep(labels):
         def body(_, ib):
+            if kernel:
+                return None, ops.eps_min_label(
+                    _block_rows(ib), x, labels, core, eps_sq
+                )
             d = _pairwise_sq_l2_jnp(_block_rows(ib), x)
             adj = (d <= eps_sq) & core[None, :]
             cand = jnp.where(adj, labels[None, :], sentinel)
@@ -104,6 +122,9 @@ def _dbscan_device(x: Array, eps: float, *, min_pts: int, block: int, max_iter: 
 
     # -- 3. border points: nearest core neighbor within eps -----------------
     def _border_body(_, ib):
+        if kernel:
+            dmin, lab = ops.eps_nearest_core(_block_rows(ib), x, labels, core)
+            return None, jnp.where(dmin <= eps_sq, lab, sentinel)
         d = _pairwise_sq_l2_jnp(_block_rows(ib), x)
         d = jnp.where(core[None, :], d, jnp.inf)
         j = jnp.argmin(d, axis=1)
@@ -124,12 +145,21 @@ def dbscan(
     *,
     block: int = 1024,
     max_iter: int = 64,
+    kernel: bool = True,
 ) -> DBSCANResult:
-    """Run DBSCAN; returns contiguous labels (-1 = noise) on host."""
+    """Run DBSCAN; returns contiguous labels (-1 = noise) on host.
+
+    ``kernel=True`` (default) streams each phase through the fused eps-graph
+    kernels (kernels/ops dispatch); ``kernel=False`` keeps the in-place jnp
+    formulation — the oracle the kernel path is tested against.
+    """
     x = jnp.asarray(x, jnp.float32)
     n = int(x.shape[0])
     block = int(min(block, max(128, n)))
-    labels, core, iters = _dbscan_device(x, float(eps), min_pts=int(min_pts), block=block, max_iter=max_iter)
+    labels, core, iters = _dbscan_device(
+        x, float(eps), min_pts=int(min_pts), block=block, max_iter=max_iter,
+        kernel=bool(kernel),
+    )
     labels = np.asarray(labels)
     core = np.asarray(core)
     iters = int(iters)

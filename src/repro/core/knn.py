@@ -235,6 +235,7 @@ def _scan_phase(
     scan_scale: Array | None,
     bucket_count: Array,
     cap: int,
+    qmask: Array | None = None,
 ) -> _Carry:
     """One bounded best-first scan phase (main buckets or delta buckets).
 
@@ -242,12 +243,21 @@ def _scan_phase(
     (exact termination: lb is sorted and kth-best is non-increasing).  The
     carry's top-k streams THROUGH phases: the delta phase starts from the
     main phase's result and keeps merging into the same (Q, kk) state.
+
+    ``qmask`` (Q,) bool — optional per-query kill switch: a False query
+    visits NOTHING in this phase (not even the +inf-bound spill that an
+    empty carry would otherwise trigger).  The routed layout uses it to
+    turn a pruned (query, host) pair into genuine zero work on that host;
+    ``None`` (every other caller) compiles to the unmasked predicate.
     """
 
     def active_mask(c: _Carry) -> Array:
         kth = jnp.sqrt(c.top_d[:, -1])  # inf until kk found
         cur_lb = jax.lax.dynamic_slice_in_dim(lb_sorted, c.t * beam, beam, axis=1)
-        return cur_lb <= kth[:, None]  # (Q, beam)
+        act = cur_lb <= kth[:, None]  # (Q, beam)
+        if qmask is not None:
+            act = act & qmask[:, None]
+        return act
 
     def cond(c: _Carry) -> Array:
         return (c.t < n_steps) & jnp.any(active_mask(c))
@@ -369,11 +379,14 @@ def scan_sorted(
     kernel: bool = True,
     delta: DeltaView | None = None,
     dbounds: PhaseBounds | None = None,
+    qmask: Array | None = None,
 ) -> ScanOut:
     """STEP 2b/2c executor body: bounded best-first scan over the bucket
     rows (and delta rows) it is given, visiting in the precomputed
     ``PhaseBounds`` order.  Contains the ``while_loop`` but NO sort — see
-    ``bucket_bounds`` for why the stages are split."""
+    ``bucket_bounds`` for why the stages are split.  ``qmask`` (Q,) bool
+    suppresses both phases per query (see ``_scan_phase``; the routing
+    tier's host pruning)."""
     qn = q.shape[0]
     _, cap, _ = forest.bucket_x.shape
 
@@ -406,6 +419,7 @@ def scan_sorted(
     out = _scan_phase(
         init, q, bounds.order, bounds.lb_sorted, n_steps, beam,
         scan_step, scan_x, scan_ids, scan_scale, bucket_count, cap,
+        qmask=qmask,
     )
     total_steps = out.t
     visits_main = out.visits
@@ -423,6 +437,7 @@ def scan_sorted(
         out = _scan_phase(
             out._replace(t=jnp.int32(0)), q, dbounds.order, dbounds.lb_sorted,
             n_steps_d, beam, dstep, dx, dids, None, dcount, dcap,
+            qmask=qmask,
         )
         total_steps = total_steps + out.t
         n_elig_d = dbounds.n_elig

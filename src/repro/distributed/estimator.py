@@ -30,6 +30,30 @@ K_ACT_TRAIN = 12.0  # activation passes per layer (fwd+remat+bwd, incl. norms)
 K_ACT_FWD = 4.0
 
 
+def estimate_allgather_bytes(
+    payload_bytes: float, participants, *, factor: float | None = None
+):
+    """Cross-host wire bytes of a ring all-gather of ``payload_bytes`` per
+    participant over ``participants`` hosts.
+
+    This is the routing tier's pricing currency (distributed/router/cost.py):
+    the kNN merge gathers each participating host's top-k (distance, id)
+    pairs (core.knn.merge_shard_topk), so a query that fans to H hosts moves
+    ``factor * payload * (H - 1)`` bytes — the same per-device traffic rule
+    hlo_cost.py applies to measured all-gather ops.  ``participants`` may be
+    a traced array (the router prices inside the compiled search program).
+    """
+    if factor is None:
+        from repro.distributed.hlo_cost import COLLECTIVE_FACTORS
+
+        factor = COLLECTIVE_FACTORS["all-gather"]
+    import jax.numpy as jnp
+
+    return factor * payload_bytes * jnp.maximum(
+        jnp.asarray(participants, jnp.float32) - 1.0, 0.0
+    )
+
+
 def _local_bytes(tree_shape: Any, shardings: Any) -> int:
     """Exact per-device bytes of a sharded pytree (leaf size / shard count)."""
     total = 0

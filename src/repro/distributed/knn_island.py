@@ -101,6 +101,7 @@ def sharded_search(
     kernel: bool = True,
     per_island: bool = False,
     explain: bool = False,
+    host_sel: Array | None = None,
 ) -> tuple[Array, ...]:
     """Sharded twin of ``core.knn.knn_search_impl`` — same signature shape,
     same return triple, bitwise-identical results.  ``per_island=True``
@@ -132,6 +133,17 @@ def sharded_search(
     ``steps`` sums per-shard trip counts (each shard's bounded scan
     terminates on its local bound ordering, so the total can legally
     exceed the single-device count even though the RESULTS are identical).
+
+    ``host_sel`` ((Q, S) bool, replicated math upstream) is the routing
+    tier's per-query host-eligibility table (distributed/router/): a False
+    (query, shard) pair masks that shard's bucket/delta selection for the
+    query AND kills its scan loop (``scan_sorted``'s ``qmask``), so a
+    pruned host does ZERO bound evaluations and ZERO member scans for the
+    query and its carry stays (+inf, -1) — which contributes nothing to
+    ``merge_shard_topk``.  Soundness (hosts are only pruned when their
+    metric lower bound exceeds a valid upper bound on the merged kth-best)
+    is the router's contract; under it results stay bitwise-identical to
+    ``host_sel=None`` (tests/test_routed_exec.py gates this).
     """
     S = mesh.shape[axis]
     qn = q.shape[0]
@@ -142,11 +154,17 @@ def sharded_search(
     kk = min(k, n_cap)
     have_delta = delta is not None
 
-    def bounds_island(forest_l, q_l, delta_l):
+    def bounds_island(forest_l, q_l, delta_l, hs_l):
         n_idx = forest_l.index_centers.shape[0]
         sel, route_d, route_c = cknn.route_select(
             forest_l, q_l, mode=mode, kernel=kernel
         )
+        if hs_l is not None:
+            # routing tier: this shard bounds/scans only the queries that
+            # elected it — (Q, 1) local column broadcast over the I indexes.
+            # Routing counters above stay untouched (every host still routes
+            # the replicated queries; the saving is in bounds + scans).
+            sel = sel & hs_l
         # sentinel column: pad buckets own index I -> always ineligible
         bucket_sel = jnp.pad(sel, ((0, 0), (0, 1)))
         mb = cknn.bucket_bounds(
@@ -168,7 +186,8 @@ def sharded_search(
             outs += (db.order, db.lb_sorted, db.n_elig[None])
         return outs
 
-    def scan_island(forest_l, q_l, delta_l, order_l, lbs_l, dorder_l, dlbs_l):
+    def scan_island(forest_l, q_l, delta_l, order_l, lbs_l, dorder_l, dlbs_l,
+                    hs_l):
         mb = cknn.PhaseBounds(
             order=order_l, lb_sorted=lbs_l,
             n_elig=jnp.zeros((qn,), jnp.int32),  # summed outside the island
@@ -182,6 +201,7 @@ def sharded_search(
         out = cknn.scan_sorted(
             forest_l, q_l, mb, kk=kk, beam=beam, kernel=kernel,
             delta=delta_l, dbounds=db,
+            qmask=None if hs_l is None else hs_l[:, 0],
         )
         top_d, top_i = cknn.merge_shard_topk(
             out.top_d, out.top_i, k=kk, axis_name=axis
@@ -199,13 +219,14 @@ def sharded_search(
     dspec = None if delta is None else delta_view_specs(axis)
     col = P(None, axis)  # (Q, NB) tables sharded along the bucket axis
     row = P(axis, None)  # per-shard (1, Q) vectors stacked to (S, Q)
+    hspec = None if host_sel is None else col  # (Q, S) -> (Q, 1) per shard
     bounds_out = (row, row, col, col, row)
     if have_delta:
         bounds_out += (col, col, row)
     bounds_fn = dctx.shard_map(
         bounds_island,
         mesh=mesh,
-        in_specs=(fspec, P(), dspec),
+        in_specs=(fspec, P(), dspec, hspec),
         out_specs=bounds_out,
         check_vma=False,
     )
@@ -217,18 +238,19 @@ def sharded_search(
         scan_island,
         mesh=mesh,
         in_specs=(fspec, P(), dspec, col, col,
-                  col if have_delta else None, col if have_delta else None),
+                  col if have_delta else None, col if have_delta else None,
+                  hspec),
         out_specs=scan_out,
         check_vma=False,
     )
 
-    bout = bounds_fn(forest, q, delta)
+    bout = bounds_fn(forest, q, delta, host_sel)
     route_d, route_c, order, lbs, n_elig = bout[:5]
     dorder = dlbs = None
     n_elig_d_s = jnp.zeros((S, qn), jnp.int32)
     if have_delta:
         dorder, dlbs, n_elig_d_s = bout[5:]
-    sout = scan_fn(forest, q, delta, order, lbs, dorder, dlbs)
+    sout = scan_fn(forest, q, delta, order, lbs, dorder, dlbs, host_sel)
     top_d, top_i, visits_s, ndist_s, npad_s, steps_s = sout[:6]
     merged = cknn.ScanOut(
         top_d=top_d,

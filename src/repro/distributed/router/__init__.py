@@ -1,0 +1,31 @@
+"""Multi-host routing tier over the shard islands (DIMS-style).
+
+A small replicated-per-host :class:`RoutingTable` (host-region centers,
+radii, member counts, per-(host, index) covers and the registered overlap
+rates between host regions) lets every host answer, per query, *which hosts
+can contain a top-k member* from metric lower bounds alone — and a cost
+model prices the targeted dispatch against full fan-out with the same
+collectives rule the HLO analyzer uses (``estimator.estimate_allgather_bytes``).
+
+Layering: ``table.py`` builds the table and does the pure eligibility math;
+``cost.py`` prices targeted vs fan-all; ``exec.py`` composes both with the
+existing ``knn_island.sharded_search`` (its ``host_sel`` operand) into
+``routed_search`` — same exactness contract, fewer hosts doing work.
+"""
+from repro.distributed.router.cost import DispatchCost, price_dispatch
+from repro.distributed.router.exec import RouterStats, routed_search
+from repro.distributed.router.table import (
+    RoutingTable,
+    build_routing_table,
+    host_eligibility,
+)
+
+__all__ = [
+    "DispatchCost",
+    "RouterStats",
+    "RoutingTable",
+    "build_routing_table",
+    "host_eligibility",
+    "price_dispatch",
+    "routed_search",
+]

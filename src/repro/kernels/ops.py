@@ -39,6 +39,9 @@ import jax.numpy as jnp
 from repro.kernels import ref
 from repro.kernels.bucket_scan import bucket_scan_topk_pallas, prepad_buckets
 from repro.kernels.pairwise_l2 import (
+    eps_count_pallas,
+    eps_min_label_pallas,
+    eps_nearest_core_pallas,
     pairwise_sq_l2_int8_pallas,
     pairwise_sq_l2_pallas,
 )
@@ -71,6 +74,42 @@ def pairwise_sq_l2_int8(q: Array, x_q: Array, scale: Array) -> Array:
     if _force_pallas():
         return pairwise_sq_l2_int8_pallas(q, x_q, scale, bq=64, bn=64, bd=64, interpret=True)
     return ref.pairwise_sq_l2_int8_ref(q, x_q, scale)
+
+
+def eps_count(q: Array, x: Array, eps_sq: Array) -> Array:
+    """DBSCAN core test: per-query count of eps-neighbors (thresholding
+    fused into the distance tiles — no (Q, N) block reaches HBM)."""
+    if _on_tpu():
+        return eps_count_pallas(q, x, eps_sq)
+    if _force_pallas():
+        return eps_count_pallas(q, x, eps_sq, bq=64, bn=64, interpret=True)
+    return ref.eps_count_ref(q, x, eps_sq)
+
+
+def eps_min_label(
+    q: Array, x: Array, labels: Array, core: Array, eps_sq: Array
+) -> Array:
+    """DBSCAN label sweep: min label over core eps-neighbors (N if none)."""
+    if _on_tpu():
+        return eps_min_label_pallas(q, x, labels, core, eps_sq)
+    if _force_pallas():
+        return eps_min_label_pallas(
+            q, x, labels, core, eps_sq, bq=64, bn=64, interpret=True
+        )
+    return ref.eps_min_label_ref(q, x, labels, core, eps_sq)
+
+
+def eps_nearest_core(
+    q: Array, x: Array, labels: Array, core: Array
+) -> tuple[Array, Array]:
+    """DBSCAN border pass: (d2, label) of each query's nearest core point."""
+    if _on_tpu():
+        return eps_nearest_core_pallas(q, x, labels, core)
+    if _force_pallas():
+        return eps_nearest_core_pallas(
+            q, x, labels, core, bq=64, bn=64, interpret=True
+        )
+    return ref.eps_nearest_core_ref(q, x, labels, core)
 
 
 def knn_topk(q: Array, x: Array, *, k: int) -> tuple[Array, Array]:

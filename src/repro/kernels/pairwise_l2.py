@@ -16,6 +16,13 @@ comfortably inside the ~16 MB v5e VMEM while keeping MXU tiles
 The int8 variant dequantizes the datastore tile in-register (per-row scale),
 halving (vs bf16) or quartering (vs f32) the HBM traffic of a datastore
 scan — the memory-roofline lever for decode-time retrieval.
+
+The ``eps_*`` kernels below fuse DBSCAN's eps-neighbor-graph reductions
+(core counting, min-label propagation, nearest-core border assignment) into
+the same tiled distance stream: grid (Q/bq, N/bn) with D whole inside the
+block (padded to 128) and the N axis sequential over a (bq, 1)-shaped
+running output, so the per-query distance row is thresholded/reduced
+in-register and the (Q, N) block never reaches HBM.
 """
 from __future__ import annotations
 
@@ -104,6 +111,178 @@ def pairwise_sq_l2_pallas(
         interpret=interpret,
     )(qp, xp)
     return jnp.maximum(out[:qn, :n], 0.0)
+
+
+# --- fused DBSCAN eps-graph reductions -------------------------------------
+# Shared tile shape: q (bq, Dp), x (bn, Dp) with Dp the whole (128-padded)
+# feature axis; each kernel reduces its (bq, bn) in-register distance tile
+# straight into a (bq, 1) running output.  ``n_real`` masks the N padding.
+
+
+def _tile_sq_l2(q_ref, x_ref):
+    q = q_ref[...].astype(jnp.float32)
+    x = x_ref[...].astype(jnp.float32)
+    qq = jnp.sum(q * q, axis=1)
+    xx = jnp.sum(x * x, axis=1)
+    cross = jax.lax.dot_general(
+        q, x, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    return jnp.maximum(qq[:, None] + xx[None, :] - 2.0 * cross, 0.0)
+
+
+def _eps_count_kernel(q_ref, x_ref, eps_ref, o_ref, *, bn, n_real):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    d2 = _tile_sq_l2(q_ref, x_ref)
+    gidx = j * bn + jax.lax.broadcasted_iota(jnp.int32, d2.shape, 1)
+    within = (d2 <= eps_ref[0, 0]) & (gidx < n_real)
+    o_ref[...] += jnp.sum(within, axis=1, keepdims=True).astype(jnp.int32)
+
+
+def _eps_min_label_kernel(q_ref, x_ref, lab_ref, core_ref, eps_ref, o_ref, *, bn, n_real):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.full_like(o_ref, n_real)
+
+    d2 = _tile_sq_l2(q_ref, x_ref)
+    gidx = j * bn + jax.lax.broadcasted_iota(jnp.int32, d2.shape, 1)
+    adj = (
+        (d2 <= eps_ref[0, 0]) & (core_ref[...] != 0)[None, :] & (gidx < n_real)
+    )
+    cand = jnp.where(adj, lab_ref[...][None, :], jnp.int32(n_real))
+    o_ref[...] = jnp.minimum(o_ref[...], jnp.min(cand, axis=1, keepdims=True))
+
+
+def _eps_nearest_core_kernel(
+    q_ref, x_ref, lab_ref, core_ref, o_d_ref, o_lab_ref, *, bn, n_real
+):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        o_d_ref[...] = jnp.full_like(o_d_ref, jnp.inf)
+        o_lab_ref[...] = jnp.full_like(o_lab_ref, n_real)
+
+    d2 = _tile_sq_l2(q_ref, x_ref)
+    gidx = j * bn + jax.lax.broadcasted_iota(jnp.int32, d2.shape, 1)
+    d2 = jnp.where((core_ref[...] != 0)[None, :] & (gidx < n_real), d2, jnp.inf)
+    a = jnp.argmin(d2, axis=1)  # first-index-wins inside the tile
+    dmin = jnp.take_along_axis(d2, a[:, None], axis=1)  # (bq, 1)
+    lab = lab_ref[...][a][:, None]
+    # strict <: the earliest tile keeps ties, matching a full-row argmin
+    better = dmin < o_d_ref[...]
+    o_lab_ref[...] = jnp.where(better, lab, o_lab_ref[...])
+    o_d_ref[...] = jnp.where(better, dmin, o_d_ref[...])
+
+
+def _eps_operands(q, x, bq, bn):
+    qp = _pad_to(q.astype(jnp.float32), 0, bq)
+    qp = _pad_to(qp, 1, 128)
+    xp = _pad_to(x.astype(jnp.float32), 0, bn)
+    xp = _pad_to(xp, 1, 128)
+    grid = (qp.shape[0] // bq, xp.shape[0] // bn)
+    qspec = pl.BlockSpec((bq, qp.shape[1]), lambda i, j: (i, 0))
+    xspec = pl.BlockSpec((bn, xp.shape[1]), lambda i, j: (j, 0))
+    nspec = pl.BlockSpec((bn,), lambda i, j: (j,))  # per-row N-axis operands
+    espec = pl.BlockSpec((1, 1), lambda i, j: (0, 0))  # replicated scalar
+    ospec = pl.BlockSpec((bq, 1), lambda i, j: (i, 0))
+    return qp, xp, grid, qspec, xspec, nspec, espec, ospec
+
+
+@functools.partial(jax.jit, static_argnames=("bq", "bn", "interpret"))
+def eps_count_pallas(
+    q: Array,
+    x: Array,
+    eps_sq: Array,
+    *,
+    bq: int = 256,
+    bn: int = 256,
+    interpret: bool = False,
+) -> Array:
+    """(Q,) i32: per query, |{j : d2(q, x_j) <= eps_sq}|."""
+    qn, n = q.shape[0], x.shape[0]
+    qp, xp, grid, qspec, xspec, _, espec, ospec = _eps_operands(q, x, bq, bn)
+    out = pl.pallas_call(
+        functools.partial(_eps_count_kernel, bn=bn, n_real=n),
+        grid=grid,
+        in_specs=[qspec, xspec, espec],
+        out_specs=ospec,
+        out_shape=jax.ShapeDtypeStruct((qp.shape[0], 1), jnp.int32),
+        interpret=interpret,
+    )(qp, xp, jnp.asarray(eps_sq, jnp.float32).reshape(1, 1))
+    return out[:qn, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("bq", "bn", "interpret"))
+def eps_min_label_pallas(
+    q: Array,
+    x: Array,
+    labels: Array,
+    core: Array,
+    eps_sq: Array,
+    *,
+    bq: int = 256,
+    bn: int = 256,
+    interpret: bool = False,
+) -> Array:
+    """(Q,) i32: min label over eps-neighbors that are core; N (= len(x))
+    when a query has none — DBSCAN's sentinel convention."""
+    qn, n = q.shape[0], x.shape[0]
+    qp, xp, grid, qspec, xspec, nspec, espec, ospec = _eps_operands(q, x, bq, bn)
+    out = pl.pallas_call(
+        functools.partial(_eps_min_label_kernel, bn=bn, n_real=n),
+        grid=grid,
+        in_specs=[qspec, xspec, nspec, nspec, espec],
+        out_specs=ospec,
+        out_shape=jax.ShapeDtypeStruct((qp.shape[0], 1), jnp.int32),
+        interpret=interpret,
+    )(
+        qp, xp,
+        _pad_to(labels.astype(jnp.int32), 0, bn),
+        _pad_to(core.astype(jnp.int32), 0, bn),
+        jnp.asarray(eps_sq, jnp.float32).reshape(1, 1),
+    )
+    return out[:qn, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("bq", "bn", "interpret"))
+def eps_nearest_core_pallas(
+    q: Array,
+    x: Array,
+    labels: Array,
+    core: Array,
+    *,
+    bq: int = 256,
+    bn: int = 256,
+    interpret: bool = False,
+) -> tuple[Array, Array]:
+    """Per query: (d2 to the nearest core point, that point's label) —
+    (+inf, N) when no core point exists.  First-index tie-breaking matches
+    ``jnp.argmin`` over the masked full row (the jnp oracle)."""
+    qn, n = q.shape[0], x.shape[0]
+    qp, xp, grid, qspec, xspec, nspec, _, ospec = _eps_operands(q, x, bq, bn)
+    dmin, lab = pl.pallas_call(
+        functools.partial(_eps_nearest_core_kernel, bn=bn, n_real=n),
+        grid=grid,
+        in_specs=[qspec, xspec, nspec, nspec],
+        out_specs=[ospec, ospec],
+        out_shape=[
+            jax.ShapeDtypeStruct((qp.shape[0], 1), jnp.float32),
+            jax.ShapeDtypeStruct((qp.shape[0], 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(
+        qp, xp,
+        _pad_to(labels.astype(jnp.int32), 0, bn),
+        _pad_to(core.astype(jnp.int32), 0, bn),
+    )
+    return dmin[:qn, 0], lab[:qn, 0]
 
 
 @functools.partial(

@@ -21,6 +21,36 @@ def pairwise_sq_l2_ref(q: Array, x: Array) -> Array:
     return jnp.maximum(qq + xx - 2.0 * (q @ x.T), 0.0)
 
 
+def eps_count_ref(q: Array, x: Array, eps_sq: Array) -> Array:
+    """(Q,) i32 eps-neighbor counts — DBSCAN's core test."""
+    d2 = pairwise_sq_l2_ref(q, x)
+    return jnp.sum(d2 <= eps_sq, axis=1).astype(jnp.int32)
+
+
+def eps_min_label_ref(
+    q: Array, x: Array, labels: Array, core: Array, eps_sq: Array
+) -> Array:
+    """(Q,) i32 min label over core eps-neighbors; N (sentinel) if none."""
+    d2 = pairwise_sq_l2_ref(q, x)
+    adj = (d2 <= eps_sq) & (core != 0)[None, :]
+    sentinel = jnp.int32(x.shape[0])
+    return jnp.min(jnp.where(adj, labels[None, :].astype(jnp.int32), sentinel), axis=1)
+
+
+def eps_nearest_core_ref(
+    q: Array, x: Array, labels: Array, core: Array
+) -> tuple[Array, Array]:
+    """Per query: (d2 to nearest core point, its label); (+inf, N) if none."""
+    d2 = pairwise_sq_l2_ref(q, x)
+    d2 = jnp.where((core != 0)[None, :], d2, jnp.inf)
+    j = jnp.argmin(d2, axis=1)
+    dmin = jnp.take_along_axis(d2, j[:, None], axis=1)[:, 0]
+    lab = jnp.where(
+        jnp.isinf(dmin), jnp.int32(x.shape[0]), labels.astype(jnp.int32)[j]
+    )
+    return dmin, lab
+
+
 def knn_topk_ref(q: Array, x: Array, k: int) -> tuple[Array, Array]:
     """Exact k smallest squared-L2 distances + indices: (Q, k), (Q, k)."""
     d2 = pairwise_sq_l2_ref(q, x)

@@ -64,6 +64,11 @@ PyTree = Any
 SHED_REJECTED = "rejected"  # admission control refused at submit()
 SHED_EXPIRED_QUEUE = "expired_queue"  # deadline passed while waiting in queue
 SHED_EXPIRED_FLIGHT = "expired_flight"  # deadline passed while decoding
+# speculative early expiry: the deadline has NOT lapsed yet, but the tokens
+# still owed x the measured step time already overrun it — shedding now
+# returns the slot instead of burning doomed decode steps until the clock
+# catches up
+SHED_EARLY = "early"
 
 
 @dataclass
@@ -352,19 +357,37 @@ class ServeEngine:
         return expired
 
     def _expire_slots(self) -> list[Request]:
-        """Evict mid-flight requests whose deadline passed: the slot frees
-        for the refill below instead of burning steps on a doomed decode.
-        Partial ``out_tokens`` stay on the request (a caller may still use
-        a truncated answer)."""
+        """Evict mid-flight requests whose deadline passed — and,
+        speculatively, those that cannot possibly finish in time: once the
+        tokens still owed times the measured step time overrun the budget,
+        the request is doomed, so shedding it NOW (reason ``"early"``)
+        frees the slot for the refill below instead of burning steps until
+        the clock catches up.  Partial ``out_tokens`` stay on the request
+        either way (a caller may still use a truncated answer)."""
         now = time.perf_counter()
+        step_s = self.step_time_s()
         evicted: list[Request] = []
         for s in range(self.num_slots):
             req = self.slot_req[s]
-            if req is not None and req._t_deadline and now > req._t_deadline:
+            if req is None or not req._t_deadline:
+                continue
+            if now > req._t_deadline:
                 self._shed(req, SHED_EXPIRED_FLIGHT, now)
-                self.slot_req[s] = None
-                self.slot_pos[s] = 0
-                evicted.append(req)
+            elif step_s is not None:
+                # tokens this slot still owes: budget remainder, capped by
+                # the cache-length retirement below (slot_pos >= max_len-1)
+                remaining = min(
+                    req.max_new_tokens - len(req.out_tokens),
+                    self.max_len - 1 - int(self.slot_pos[s]),
+                )
+                if now + remaining * step_s <= req._t_deadline:
+                    continue
+                self._shed(req, SHED_EARLY, now)
+            else:
+                continue
+            self.slot_req[s] = None
+            self.slot_pos[s] = 0
+            evicted.append(req)
         return evicted
 
     def _fill_slots(self) -> None:

@@ -87,6 +87,13 @@ class ForestDatastore:
     # that many devices on the 'model' axis, searches run the
     # distributed/knn_island.py islands.
     shards: int = dataclasses.field(default=1, metadata=dict(static=True))
+    # routing tier (routed layout): the replicated RoutingTable rides as a
+    # TRACED pytree leaf — a rebuild-swapped table reaches compiled decode
+    # steps as a fresh operand — while the dispatch policy is static
+    router_table: Any = None  # distributed.router.RoutingTable | None
+    fanout: str | None = dataclasses.field(
+        default=None, metadata=dict(static=True)
+    )
 
 
 def datastore_from_index(
@@ -144,6 +151,13 @@ def datastore_from_index(
         n_main=ix.n_total,
         next_id=ix.n_total,
         shards=ix.backend.shards,
+        # routed layout: the backend's table is live after the device upload
+        # above; non-routed backends have no table attribute
+        router_table=getattr(ix.backend, "table", None),
+        fanout=(
+            ix.cfg.layout.routing.fanout
+            if ix.backend.kind == "routed" else None
+        ),
     )
 
 
@@ -255,7 +269,17 @@ def forest_knn(
     from repro.stream.ingest import delta_view
 
     delta = None if ds.delta is None else delta_view(ds.delta)
-    if ds.shards > 1:
+    if ds.shards > 1 and ds.router_table is not None:
+        from repro.distributed import router as drouter
+        from repro.distributed import knn_island
+
+        d, ids, *_ = drouter.routed_search(
+            knn_island.default_mesh(ds.shards), dctx.MODEL_AXIS,
+            ds.forest, hidden.astype(jnp.float32), delta, ds.router_table,
+            k=k, mode="forest", kernel=kernel,
+            fanout=ds.fanout or "auto",
+        )
+    elif ds.shards > 1:
         from repro.distributed import knn_island
 
         d, ids, _ = knn_island.sharded_search(

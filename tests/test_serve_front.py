@@ -17,6 +17,7 @@ from repro.configs import get_smoke_config
 from repro.data.synthetic import embedding_datastore
 from repro.models.model import Model
 from repro.serve.engine import (
+    SHED_EARLY,
     SHED_EXPIRED_FLIGHT,
     SHED_EXPIRED_QUEUE,
     SHED_REJECTED,
@@ -45,7 +46,9 @@ def _req(cfg, rid, *, tokens=4, deadline=None, seed=0):
 def _shed_total(reg):
     return sum(
         reg.value("serve.shed", reason=r)
-        for r in (SHED_REJECTED, SHED_EXPIRED_QUEUE, SHED_EXPIRED_FLIGHT)
+        for r in (
+            SHED_REJECTED, SHED_EXPIRED_QUEUE, SHED_EXPIRED_FLIGHT, SHED_EARLY,
+        )
     )
 
 
@@ -110,7 +113,11 @@ def test_deadline_expires_while_queued(lm):
 def test_deadline_expires_mid_flight(lm):
     """A decoding request whose budget lapses is evicted from its slot:
     partial output is kept, the slot frees for other work, and the shed is
-    counted under its own reason."""
+    counted under a mid-flight reason.  With the warmed engine's step-time
+    estimate, the speculative pass usually sheds it as ``"early"`` before
+    the clock even reaches the deadline; if a slow step lets the deadline
+    lapse first, the classic ``"expired_flight"`` reason wins — either way
+    it is exactly one mid-flight shed."""
     cfg, model, params = lm
     engine = ServeEngine(model, params, num_slots=1, max_len=128)
     engine.submit(_req(cfg, 99, tokens=2))  # warm: compile prefill + decode
@@ -119,12 +126,35 @@ def test_deadline_expires_mid_flight(lm):
     assert engine.submit(r) is True  # idle engine: projected wait 0
     finished = engine.run()
     assert finished == [r]
-    assert r.shed and r.shed_reason == SHED_EXPIRED_FLIGHT
+    assert r.shed and r.shed_reason in (SHED_EXPIRED_FLIGHT, SHED_EARLY)
     assert not r.done
     assert len(r.out_tokens) >= 1  # prefill's first token at minimum
     assert len(r.out_tokens) < 10_000
     assert all(s is None for s in engine.slot_req)  # slot actually freed
-    assert engine.obs.value("serve.shed", reason=SHED_EXPIRED_FLIGHT) == 1
+    assert engine.obs.value("serve.shed", reason=r.shed_reason) == 1
+    _assert_conserved(engine)
+
+
+def test_speculative_early_expiry(lm):
+    """A request whose remaining tokens x measured step time overrun the
+    deadline is shed ``"early"`` — long BEFORE the deadline itself lapses.
+    The absurd step-time hint makes the projection deterministic: two real
+    decode steps cannot drag the median low enough for 40+ owed tokens to
+    fit a 5-second budget, yet the wall clock stays far from the deadline."""
+    cfg, model, params = lm
+    engine = ServeEngine(model, params, num_slots=1, max_len=64,
+                         step_time_hint_s=10.0)
+    r = _req(cfg, 0, tokens=50, deadline=5.0)
+    t0 = time.perf_counter()
+    assert engine.submit(r) is True  # empty queue: projected wait 0
+    finished = engine.run()
+    assert finished == [r]
+    assert r.shed and r.shed_reason == SHED_EARLY and r.state == "shed"
+    assert not r.done
+    assert time.perf_counter() - t0 < 5.0  # shed before the deadline lapsed
+    assert len(r.out_tokens) < 50
+    assert all(s is None for s in engine.slot_req)  # slot freed
+    assert engine.obs.value("serve.shed", reason=SHED_EARLY) == 1
     _assert_conserved(engine)
 
 
